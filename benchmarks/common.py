@@ -1,0 +1,18 @@
+"""Shared benchmark utilities."""
+import time
+
+import jax
+
+
+def timeit(fn, *args, warmup: int = 1, iters: int = 3):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters, out
+
+
+def csv_row(name: str, us_per_call: float, derived: str = "") -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,58 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only table3,fig2,...]
+
+Prints ``name,us_per_call,derived`` CSV rows (the harness contract).
+"""
+import argparse
+import sys
+import traceback
+
+import jax
+
+jax.config.update("jax_enable_x64", True)   # paper CPU baselines are f64
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sizes (slower)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: table3,table4,fig2,table5,fig3")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    print("name,us_per_call,derived")
+    suites = []
+    if only is None or "table3" in only:
+        from . import table3_single_device
+        suites.append(("table3", lambda: table3_single_device.run(args.full)))
+    if only is None or "table4" in only:
+        from . import table4_distributed
+        suites.append(("table4", table4_distributed.run))
+    if only is None or "fig2" in only:
+        from . import fig2_adjoint_vs_naive
+        suites.append(("fig2", fig2_adjoint_vs_naive.run))
+    if only is None or "table5" in only:
+        from . import table5_gradcheck
+        suites.append(("table5", table5_gradcheck.run))
+    if only is None or "fig3" in only:
+        from . import fig3_inverse
+        steps = 1500 if args.full else 300
+        suites.append(("fig3", lambda: fig3_inverse.run(steps=steps)))
+
+    failures = 0
+    for name, fn in suites:
+        try:
+            for row in fn():
+                print(row, flush=True)
+        except Exception as e:  # report but continue
+            failures += 1
+            print(f"{name}/ERROR,0,{type(e).__name__}: {e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

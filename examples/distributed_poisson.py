@@ -1,0 +1,51 @@
+"""Distributed Poisson solve with halo exchange (paper §3.3) on 8 forced
+host devices — run AS A SCRIPT (device count must be set before jax loads):
+
+    PYTHONPATH=src python examples/distributed_poisson.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core.distributed import DSparseTensor
+from repro.core.sparse import SparseTensor
+from repro.data.poisson import poisson2d
+
+ng = 96
+n = ng * ng
+A = poisson2d(ng)
+mesh = jax.make_mesh((8,), ("data",),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+D = DSparseTensor.from_global(np.asarray(A.val), np.asarray(A.row),
+                              np.asarray(A.col), A.shape, mesh)
+print(f"partitioned {n} dof over {D.meta.p} shards "
+      f"(halo ±{D.meta.h_lo}/{D.meta.h_hi} rows)")
+
+b = D.stack_vector(np.ones(n))
+x = D.solve(b, tol=1e-10, maxiter=5000)
+xg = D.gather_global(x)
+print("residual:", float(np.abs(np.asarray(A @ jnp.asarray(xg)) - 1).max()))
+
+# gradients through the distributed solve (transposed halo exchange)
+def loss(lval):
+    A2 = DSparseTensor(D.meta, lval, D.lrow, D.lcol, D.mesh)
+    return jnp.sum(A2.solve(b, tol=1e-11, maxiter=5000) ** 2)
+
+g = jax.grad(loss)(D.lval)
+print("grad through distributed solve:", g.shape,
+      bool(jnp.all(jnp.isfinite(g))))
+
+# pipelined CG (beyond-paper): one fused reduction per iteration
+xp = D.solve(b, tol=1e-10, maxiter=5000, pipelined=True)
+print("pipelined residual:", float(np.abs(np.asarray(
+    A @ jnp.asarray(D.gather_global(xp))) - 1).max()))
+
+# distributed eigensolve
+w, V = D.eigsh(k=3, tol=1e-8, maxiter=1500)
+print("smallest eigenvalues:", np.asarray(w).round(8))

@@ -1,0 +1,19 @@
+"""Paper §4.4 end-to-end: learn κ(x) in −∇·(κ∇u)=f from observations of u.
+
+The only solver-specific line in the training loop is ``A.solve(f)`` —
+gradients flow through the adjoint path (§3.2) into the κ parametrization.
+
+    PYTHONPATH=src python examples/inverse_coefficient.py [steps]
+"""
+import sys
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from benchmarks.fig3_inverse import run
+
+if __name__ == "__main__":
+    steps = int(sys.argv[1]) if len(sys.argv) > 1 else 1500
+    for row in run(steps=steps):
+        print(row)

@@ -1,0 +1,51 @@
+"""End-to-end LM training driver with fault tolerance.
+
+Default: a ~100M-parameter llama-family model for a few hundred steps on CPU
+with checkpoint/restart (kill it mid-run and re-invoke with --resume).
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+    PYTHONPATH=src python examples/train_lm.py --steps 200 --resume
+    PYTHONPATH=src python examples/train_lm.py --fail-at 120   # FT demo
+"""
+import argparse
+import dataclasses
+import sys
+
+sys.argv = sys.argv  # keep argparse happy under -m
+
+from repro.configs import get_config
+from repro.launch import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--fail-at", type=int, default=None)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm_100m")
+    args = ap.parse_args()
+
+    # ~100M-param llama-family config (decoder, GQA, tied embeddings)
+    base = get_config("llama3.2-1b")
+    cfg = dataclasses.replace(
+        base, name="llama-100m", n_layers=8, d_model=768, n_heads=12,
+        n_kv_heads=4, d_ff=2048, vocab=32_000, head_dim=64,
+        dtype="float32", param_dtype="float32", remat="none")
+
+    import repro.configs as C
+    C.REGISTRY[cfg.name] = cfg
+    argv = ["--arch", cfg.name, "--steps", str(args.steps),
+            "--batch", str(args.batch), "--seq", str(args.seq),
+            "--ckpt-dir", args.ckpt_dir, "--ckpt-every", "50",
+            "--lr", "3e-4"]
+    if args.resume:
+        argv.append("--resume")
+    if args.fail_at is not None:
+        argv += ["--fail-at", str(args.fail_at)]
+    train.main(argv)
+
+
+if __name__ == "__main__":
+    main()

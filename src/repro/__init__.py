@@ -1,0 +1,5 @@
+"""repro — JAX/TPU reproduction of torch-sla (differentiable sparse linear
+algebra with adjoint solvers and sparse tensor parallelism), embedded in a
+multi-pod LM training/serving framework."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,9 @@
+"""qwen1.5-110b — QKV bias [hf:Qwen/Qwen1.5-110B; hf]."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen1.5-110b", family="dense",
+    n_layers=80, d_model=8192, n_heads=64, n_kv_heads=8, d_ff=49152,
+    vocab=152_064, head_dim=128, qkv_bias=True,
+    rope_theta=1_000_000.0, act="silu",
+)

@@ -1,0 +1,20 @@
+"""repro.core — differentiable sparse linear algebra (the paper's contribution).
+
+Public API mirrors torch-sla:
+
+    from repro.core import SparseTensor, SparseTensorList, nonlinear_solve
+    x = A.solve(b)                      # auto-dispatched, adjoint gradients
+    w, V = A.eigsh(k=6)                 # Hellmann–Feynman gradients
+    u = nonlinear_solve(residual, x0, theta)
+"""
+from .sparse import SparseTensor, SparseTensorList, coo_matvec, build_bell
+from .adjoint import nonlinear_solve, sparse_solve, sparse_eigsh
+from .dispatch import SolverConfig, make_config, select_backend, register_backend
+from . import solvers, precond
+
+__all__ = [
+    "SparseTensor", "SparseTensorList", "coo_matvec", "build_bell",
+    "nonlinear_solve", "sparse_solve", "sparse_eigsh",
+    "SolverConfig", "make_config", "select_backend", "register_backend",
+    "solvers", "precond",
+]

@@ -1,0 +1,249 @@
+"""O(1)-graph adjoint differentiation framework (paper §3.2).
+
+Every solve is wrapped in ``jax.custom_vjp`` so the autodiff graph contains a
+single node regardless of solver iterations or backend — the JAX rendering of
+torch-sla's ``torch.autograd.Function`` layer.  Instances of Eq. (2):
+
+* linear   (Eq. 3):  Aᵀλ = ∂L/∂x;   ∂L/∂b = λ,  ∂L/∂A_ij = −λ_i x_j  (pattern only)
+* nonlinear:         Jᵀλ = ∂L/∂u*;  ∂L/∂θ = −λᵀ ∂F/∂θ  (via jax.vjp, matrix-free)
+* eigen    (Eq. 4):  ∂λ_k/∂A_ij = v_ki v_kj (Hellmann–Feynman); eigenvector
+                     cotangents take one deflated linear solve per pair.
+
+Only (A, x*) are stashed by the forward — O(n + nnz) residency; intermediate
+Krylov iterates are never referenced (paper Table 2).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import dispatch as _dispatch
+from . import solvers as _solvers
+from .dispatch import SolverConfig
+from .sparse import SparseTensor
+
+__all__ = ["sparse_solve", "nonlinear_solve", "sparse_eigsh", "sparse_slogdet"]
+
+
+def _sum_to_shape(x: jax.Array, shape) -> jax.Array:
+    """Reverse broadcasting: sum x down to ``shape``."""
+    if x.shape == tuple(shape):
+        return x
+    extra = x.ndim - len(shape)
+    x = x.sum(axis=tuple(range(extra))) if extra else x
+    axes = tuple(i for i, (a, b) in enumerate(zip(x.shape, shape)) if a != b)
+    return x.sum(axis=axes, keepdims=True) if axes else x
+
+
+# ---------------------------------------------------------------------------
+# linear solve (paper §3.2.2 "Linear systems")
+# ---------------------------------------------------------------------------
+
+def sparse_solve(cfg: SolverConfig, A: SparseTensor, b: jax.Array,
+                 x0: Optional[jax.Array] = None) -> jax.Array:
+    """Differentiable A.solve(b).  ``cfg`` must already be resolved."""
+    row, col = A.row, A.col
+
+    @jax.custom_vjp
+    def solve_fn(val, rhs):
+        x, _ = _dispatch.solve_impl(cfg, A.with_values(val), rhs, x0)
+        return x
+
+    def fwd(val, rhs):
+        x, _ = _dispatch.solve_impl(cfg, A.with_values(val), rhs, x0)
+        x = jax.lax.stop_gradient(x)
+        return x, (val, x)
+
+    def bwd(res, g):
+        val, x = res
+        # adjoint system Aᵀ λ = g — reuse the same backend (paper §3.2.3);
+        # transpose is a row/col swap; symmetric patterns keep kernel layouts.
+        if A.props.get("symmetric", False):
+            At = A.with_values(val)
+        else:
+            At = SparseTensor(val, col, row, (A.shape[1], A.shape[0]),
+                              props=A.props, validate=False)
+        lam, _ = _dispatch.solve_impl(cfg.transposed_for(A), At, g, None)
+        # ∂L/∂A_ij = −λ_i x_j  on the sparsity pattern — O(nnz)
+        gval_full = -(lam[..., row] * x[..., col])
+        gval = _sum_to_shape(gval_full, val.shape)
+        gb = _sum_to_shape(lam, b.shape)
+        return gval, gb
+
+    solve_fn.defvjp(fwd, bwd)
+    return solve_fn(A.val, b)
+
+
+def sparse_solve_with_info(cfg: SolverConfig, A: SparseTensor, b, x0=None):
+    """Non-differentiable variant that also returns SolveInfo."""
+    return _dispatch.solve_impl(cfg, A, b, x0)
+
+
+# ---------------------------------------------------------------------------
+# nonlinear solve (paper §3.2.2 "Nonlinear systems")
+# ---------------------------------------------------------------------------
+
+def nonlinear_solve(residual: Callable, x0: jax.Array, *theta,
+                    method: str = "newton", tol: float = 1e-8,
+                    maxiter: int = 50, inner_tol: float = 1e-10,
+                    inner_maxiter: int = 1000, damping: float = 1.0,
+                    anderson_m: int = 5):
+    """Solve F(u, θ) = 0 for u with O(1)-graph adjoint gradients w.r.t. θ.
+
+    ``residual(u, *theta)`` is any JAX-traceable function.  The forward may
+    take many Newton/Picard/Anderson iterations (each with inner linear
+    solves); the backward is ONE adjoint solve Jᵀλ = g (matrix-free BiCGStab
+    on ``jax.vjp`` of the residual) plus one VJP into θ.
+    """
+    theta = tuple(theta)
+
+    @jax.custom_vjp
+    def nl(theta):
+        return _forward(theta)
+
+    def _forward(theta):
+        F = lambda u: residual(u, *theta)
+        if method == "newton":
+            u, _ = _solvers.newton_solve(F, x0, tol=tol, maxiter=maxiter,
+                                         damping=damping,
+                                         inner_tol=inner_tol,
+                                         inner_maxiter=inner_maxiter)
+        elif method == "picard":
+            u, _ = _solvers.picard_solve(lambda u: u - F(u), x0, tol=tol,
+                                         maxiter=maxiter)
+        elif method == "anderson":
+            u, _ = _solvers.anderson_solve(lambda u: u - F(u), x0, tol=tol,
+                                           maxiter=maxiter, m=anderson_m)
+        else:
+            raise ValueError(f"unknown nonlinear method {method!r}")
+        return u
+
+    def fwd(theta):
+        u = jax.lax.stop_gradient(_forward(theta))
+        return u, (theta, u)
+
+    def bwd(res, g):
+        theta, u = res
+        # Jᵀ λ = g at the converged u* — matrix-free via vjp (paper: exact
+        # only once F(u*,θ) ≈ 0; early termination biases the gradient).
+        _, vjp_u = jax.vjp(lambda uu: residual(uu, *theta), u)
+        JT = lambda v: vjp_u(v)[0]
+        lam, _ = _solvers.bicgstab(JT, g, tol=inner_tol, maxiter=inner_maxiter)
+        # ∂L/∂θ = −λᵀ ∂F/∂θ
+        _, vjp_th = jax.vjp(lambda *th: residual(u, *th), *theta)
+        gtheta = jax.tree.map(lambda t: -t, vjp_th(lam))
+        return (tuple(gtheta),)
+
+    nl.defvjp(fwd, bwd)
+    return nl(theta)
+
+
+# ---------------------------------------------------------------------------
+# symmetric eigensolve (paper §3.2.2 "Eigenvalue problems")
+# ---------------------------------------------------------------------------
+
+def sparse_eigsh(A: SparseTensor, k: int = 6, *, method: str = "lobpcg",
+                 tol: float = 1e-6, maxiter: int = 200,
+                 compute_vector_grads: bool = True, largest: bool = False,
+                 seed: int = 0):
+    """k extremal eigenpairs of symmetric A with Hellmann–Feynman adjoint.
+
+    Returns ``(w (…,k), V (…,k,n))``.  Eigenvalue cotangents cost one O(nnz)
+    outer product; eigenvector cotangents one deflated CG solve per pair.
+    Simple (non-degenerate) eigenvalues assumed — paper §5.
+    """
+    row, col, n = A.row, A.col, A.shape[0]
+
+    def _impl(val):
+        mv = _dispatch.make_matvec(A.with_values(val))
+        if method == "lobpcg":
+            X0 = jax.random.normal(jax.random.PRNGKey(seed), (k, n), val.dtype)
+            w, V, _ = _solvers.lobpcg(mv, X0, tol=tol, maxiter=maxiter,
+                                      largest=largest)
+            return w, V
+        if method == "lanczos":
+            mv2 = mv if not largest else (lambda v: -mv(v))
+            w, V = _solvers.eigsh_lanczos(mv2, n, k,
+                                          num_steps=min(max(4 * k, 32), n),
+                                          dtype=val.dtype, seed=seed)
+            return (-w[::-1], V[::-1]) if largest else (w, V)
+        raise ValueError(f"unknown eig method {method!r}")
+
+    @jax.custom_vjp
+    def eig_fn(val):
+        return _impl(val)
+
+    def fwd(val):
+        w, V = jax.tree.map(jax.lax.stop_gradient, _impl(val))
+        return (w, V), (val, w, V)
+
+    def bwd(res, cot):
+        val, w, V = res
+        gw, gV = cot
+        # Hellmann–Feynman eigenvalue term: Σ_k gw_k v_ki v_kj on the pattern
+        gval = jnp.einsum("k,ke,ke->e", gw, V[:, row], V[:, col])
+        if compute_vector_grads:
+            # eigenvector term: y v_kᵀ with y = (λ_k I − A)⁺ (I − v_k v_kᵀ) g.
+            # Contributions from the OTHER COMPUTED pairs are analytic
+            # (gᵀv_j/(λ_k−λ_j)); the uncomputed complement — where A − λ_k I
+            # is definite for extremal pairs — takes one deflated CG solve.
+            mv = _dispatch.make_matvec(A.with_values(val))
+
+            def pair_grad(i, acc):
+                lam_i = w[i]
+                v_i = V[i]
+                gv = gV[i]
+                # analytic part over computed pairs j ≠ i (simple eigenvalues
+                # assumed — paper §5; degenerate clusters are out of scope)
+                dif = lam_i - w
+                coeff = jnp.where(jnp.arange(k) == i, 0.0,
+                                  (V @ gv) / jnp.where(jnp.abs(dif) < 1e-12,
+                                                       jnp.inf, dif))
+                y_comp = coeff @ V
+                # deflated solve on the complement of ALL computed pairs
+                proj = lambda z: z - V.T @ (V @ z)
+                op = lambda z: proj(mv(proj(z)) - lam_i * proj(z))
+                rhs = -proj(gv)
+                y_rest, _ = _solvers.cg(op, rhs, tol=tol, maxiter=maxiter * 4)
+                y = y_comp + proj(y_rest)
+                # the solver sees sym(A): differentiate the symmetrized map
+                return acc + 0.5 * (y[row] * v_i[col] + v_i[row] * y[col])
+
+            gval = jax.lax.fori_loop(0, k, pair_grad, gval)
+        return (gval,)
+
+    eig_fn.defvjp(fwd, bwd)
+    return eig_fn(A.val)
+
+
+# ---------------------------------------------------------------------------
+# log-determinant (dense fallback — documented as non-scaling, paper §3.3)
+# ---------------------------------------------------------------------------
+
+def sparse_slogdet(A: SparseTensor):
+    row, col = A.row, A.col
+
+    @jax.custom_vjp
+    def sld(val):
+        dense = A.with_values(val).todense()
+        sign, logabs = jnp.linalg.slogdet(dense)
+        return sign, logabs
+
+    def fwd(val):
+        out = sld(val)
+        return out, (val,)
+
+    def bwd(res, cot):
+        (val,) = res
+        _, glog = cot
+        dense = A.with_values(val).todense()
+        inv_T = jnp.linalg.inv(dense).T
+        # d logdet / dA_ij = (A⁻ᵀ)_ij restricted to the pattern
+        gval = glog * inv_T[..., row, col]
+        return (_sum_to_shape(gval, val.shape),)
+
+    sld.defvjp(fwd, bwd)
+    return sld(A.val)

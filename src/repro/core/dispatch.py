@@ -1,0 +1,173 @@
+"""Backend abstraction + auto-dispatch (paper §3.1, Appendix A Table 6).
+
+Five interchangeable backends behind one API — the TPU/JAX analogue of
+torch-sla's {scipy, eigen, cudss, cupy, pytorch}:
+
+| backend   | device  | methods                      | regime                         |
+|-----------|---------|------------------------------|--------------------------------|
+| dense     | MXU     | lu, cholesky                 | direct; n ≤ dense budget       |
+| jnp       | any     | cg, bicgstab, gmres          | general COO, segment-sum SpMV  |
+| pallas    | TPU     | cg, bicgstab, gmres          | block-ELL Pallas SpMV          |
+| stencil   | TPU     | cg, bicgstab                 | matrix-free structured grids   |
+| dist      | mesh    | cg, bicgstab, pipelined_cg   | DSparseTensor (core/distributed)|
+
+Dispatch policy (mirrors paper §3.1 rules, TPU constants):
+  (i)   honor explicit ``backend=``/``method=`` overrides;
+  (ii)  direct below the dense budget (paper: cuDSS below the fill-in budget);
+  (iii) iterative above, preferring the Pallas/stencil SpMV when the tensor
+        carries that layout; CG when SPD-ish, BiCGStab otherwise.
+
+Extensibility: ``register_backend`` adds a backend exactly like torch-sla's
+``select_backend`` registration — implement ``solve(cfg, A, b, x0)`` and an
+applicability predicate.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import precond as _precond
+from . import solvers as _solvers
+from .sparse import SparseTensor, coo_matvec
+
+DENSE_BUDGET = 4096          # TPU dense-direct crossover (measured, see EXPERIMENTS.md)
+DEFAULT_MAXITER = 2000
+
+_REGISTRY: dict = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverConfig:
+    """Hashable solver configuration (goes through custom_vjp nondiff args)."""
+    backend: str = "auto"
+    method: str = "auto"
+    tol: float = 1e-6
+    atol: float = 0.0
+    maxiter: int = DEFAULT_MAXITER
+    precond: str = "jacobi"
+    restart: int = 32            # gmres
+
+    def resolved(self, A: SparseTensor) -> "SolverConfig":
+        b, m = select_backend(A, self.backend, self.method)
+        return dataclasses.replace(self, backend=b, method=m)
+
+    def transposed_for(self, A: SparseTensor) -> "SolverConfig":
+        """Config for the adjoint solve Aᵀλ = g — same backend/method; the
+        paper reuses the forward backend (and factorization) for the adjoint."""
+        return self
+
+
+def register_backend(name: str, solve_fn: Callable, applicable: Callable):
+    _REGISTRY[name] = (solve_fn, applicable)
+
+
+def select_backend(A: SparseTensor, backend: str, method: str):
+    """Device- and size-aware auto-dispatch (paper §3.1)."""
+    n = A.shape[0]
+    sym = A.props.get("symmetric", False)
+    spd = A.props.get("spd_hint", False)
+    platform = jax.default_backend()
+
+    if backend == "auto":
+        if A.stencil is not None:
+            backend = "stencil"
+        elif n <= DENSE_BUDGET and not A.batch_shape:
+            backend = "dense"
+        elif A.bell is not None and platform == "tpu":
+            backend = "pallas"
+        else:
+            backend = "jnp"
+    if method == "auto":
+        if backend == "dense":
+            method = "cholesky" if spd else "lu"
+        else:
+            method = "cg" if (spd or sym) else "bicgstab"
+    return backend, method
+
+
+def make_config(A: SparseTensor, *, backend=None, method=None, tol=1e-6,
+                atol=0.0, maxiter=None, precond="jacobi", restart=32) -> SolverConfig:
+    cfg = SolverConfig(backend=backend or "auto", method=method or "auto",
+                       tol=tol, atol=atol,
+                       maxiter=maxiter or DEFAULT_MAXITER,
+                       precond=precond, restart=restart)
+    return cfg.resolved(A)
+
+
+# ---------------------------------------------------------------------------
+# matvec selection
+# ---------------------------------------------------------------------------
+
+def make_matvec(A: SparseTensor, backend: Optional[str] = None) -> Callable:
+    backend = backend or ("stencil" if A.stencil is not None else
+                          ("pallas" if A.bell is not None and
+                           jax.default_backend() == "tpu" else "jnp"))
+    if backend == "stencil" and A.stencil is not None:
+        from ..kernels import ops as kops
+        return partial(kops.stencil5_matvec, A.stencil, A.val)
+    if backend == "pallas" and A.bell is not None:
+        from ..kernels import ops as kops
+        meta, block_cols, perm = A.bell
+        return lambda x: kops.bell_matvec(meta, block_cols, perm, A.val, x,
+                                          A.shape[0])
+    return lambda x: coo_matvec(A.val, A.row, A.col, x, A.shape[0])
+
+
+def matvec(A: SparseTensor, x, backend: Optional[str] = None):
+    if A.batch_shape or (hasattr(x, "ndim") and x.ndim > 1):
+        return coo_matvec(A.val, A.row, A.col, x, A.shape[0])
+    return make_matvec(A, backend)(x)
+
+
+# ---------------------------------------------------------------------------
+# the raw (non-differentiable) solve — called by the adjoint framework for
+# both the forward and the adjoint systems.
+# ---------------------------------------------------------------------------
+
+def solve_impl(cfg: SolverConfig, A: SparseTensor, b: jax.Array,
+               x0: Optional[jax.Array] = None):
+    """One un-differentiated solve.  Batched values/rhs are vmapped here so
+    the adjoint layer never needs to care (shared-pattern batching)."""
+    if cfg.backend in _REGISTRY:
+        return _REGISTRY[cfg.backend][0](cfg, A, b, x0)
+
+    batch = jnp.broadcast_shapes(A.batch_shape, b.shape[:-1])
+    if batch:
+        val = jnp.broadcast_to(A.val, batch + A.val.shape[-1:])
+        bb = jnp.broadcast_to(b, batch + b.shape[-1:])
+        fv = val.reshape((-1, val.shape[-1]))
+        fb = bb.reshape((-1, bb.shape[-1]))
+        if x0 is not None:
+            fx0 = jnp.broadcast_to(x0, batch + x0.shape[-1:]).reshape(fb.shape)
+        def one(v, rhs, xx0=None):
+            Ai = A.with_values(v)
+            x, info = _solve_single(cfg, Ai, rhs, xx0)
+            return x, info
+        if x0 is None:
+            xs, infos = jax.vmap(lambda v, rhs: one(v, rhs))(fv, fb)
+        else:
+            xs, infos = jax.vmap(one)(fv, fb, fx0)
+        return xs.reshape(batch + (b.shape[-1],)), infos
+    return _solve_single(cfg, A, b, x0)
+
+
+def _solve_single(cfg: SolverConfig, A: SparseTensor, b, x0):
+    if cfg.backend == "dense":
+        return _solvers.dense_solve(A.todense(), b, cfg.method)
+    mv = make_matvec(A, cfg.backend)
+    M = _precond.make_preconditioner(cfg.precond, A, mv)
+    if cfg.method == "cg":
+        return _solvers.cg(mv, b, x0, M=M, tol=cfg.tol, atol=cfg.atol,
+                           maxiter=cfg.maxiter)
+    if cfg.method == "bicgstab":
+        return _solvers.bicgstab(mv, b, x0, M=M, tol=cfg.tol, atol=cfg.atol,
+                                 maxiter=cfg.maxiter)
+    if cfg.method == "gmres":
+        return _solvers.gmres(mv, b, x0, M=M, tol=cfg.tol, atol=cfg.atol,
+                              restart=cfg.restart,
+                              maxiter=max(cfg.maxiter // cfg.restart, 1))
+    raise ValueError(f"unknown method {cfg.method!r} for backend {cfg.backend!r}")

@@ -1,0 +1,100 @@
+"""Geometric multigrid V-cycle preconditioner for structured-grid operators.
+
+The paper's stated limitation (§5): the pytorch-native backend supports only
+Jacobi preconditioning, "insufficient at large DOF — hence the 1e-2
+residuals in our multi-GPU runs"; AMG (AmgX/hypre) is named as future work.
+This module closes that gap for the paper's own benchmark family
+(variable-coefficient 2D Poisson): a matrix-free geometric V-cycle —
+weighted-Jacobi smoothing, full-weighting restriction of both residual and
+coefficient field, bilinear prolongation, dense coarse solve — usable as the
+``M`` of any Krylov solver in this library (and TPU-friendly: shifts,
+pooling and small matmuls only; no triangular solves).
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..data.poisson import vc_coefficients
+from ..kernels.ref import stencil5_ref
+
+
+def _smooth(v5, x, b, omega: float = 0.8, iters: int = 2):
+    """Weighted-Jacobi smoothing on the 5-point stencil planes."""
+    diag = v5[0]
+    inv = jnp.where(jnp.abs(diag) > 1e-30, omega / diag, 0.0)
+    for _ in range(iters):
+        r = b - stencil5_ref(v5, x)
+        x = x + inv * r
+    return x
+
+
+def _restrict(r):
+    """Full-weighting 2×2 restriction (cell-centered)."""
+    ng = r.shape[0]
+    return r.reshape(ng // 2, 2, ng // 2, 2).mean(axis=(1, 3))
+
+
+def _prolong(e):
+    """Piecewise-constant/bilinear-ish prolongation (transpose of restrict)."""
+    return jnp.repeat(jnp.repeat(e, 2, axis=0), 2, axis=1)
+
+
+class MultigridPreconditioner:
+    """One V-cycle per application, built from a κ field (paper §4.4 operator).
+
+    Levels are built eagerly by 2×2-averaging κ (rediscretization
+    coarsening); the coarsest level solves densely.  All per-level operators
+    are the same signed (5, n, n) planes the stencil kernel consumes.
+    """
+
+    def __init__(self, kappa: jax.Array, *, coarsest: int = 16,
+                 pre_smooth: int = 2, post_smooth: int = 2,
+                 omega: float = 0.8):
+        ng = kappa.shape[0]
+        self.pre, self.post, self.omega = pre_smooth, post_smooth, omega
+        self.levels: List[jax.Array] = []
+        self.sizes: List[int] = []
+        k = kappa
+        while ng >= coarsest and ng % 2 == 0:
+            self.levels.append(vc_coefficients(k).reshape(5, ng, ng))
+            self.sizes.append(ng)
+            k = _restrict(k)
+            ng //= 2
+        self.levels.append(vc_coefficients(k).reshape(5, ng, ng))
+        self.sizes.append(ng)
+        # dense coarse operator (assembled once)
+        nc = ng * ng
+        eye = jnp.eye(nc).reshape(nc, ng, ng)
+        Ac = jax.vmap(lambda col: stencil5_ref(self.levels[-1], col))(eye)
+        self.A_coarse = Ac.reshape(nc, nc).T
+        # h-scaling between levels: rediscretized coarse operator acts on a
+        # 2×-coarser grid — the restricted residual needs a 4× factor to
+        # keep the two-grid correction consistent (h² scaling of the stencil)
+        self.scale = 4.0
+
+    def _vcycle(self, level: int, b):
+        v5 = self.levels[level]
+        x = _smooth(v5, jnp.zeros_like(b), b, self.omega, self.pre)
+        if level == len(self.levels) - 1:
+            nc = b.size
+            return jnp.linalg.solve(self.A_coarse, b.reshape(nc)).reshape(b.shape)
+        r = b - stencil5_ref(v5, x)
+        rc = _restrict(r) * self.scale
+        ec = self._vcycle(level + 1, rc)
+        x = x + _prolong(ec)
+        x = _smooth(v5, x, b, self.omega, self.post)
+        return x
+
+    def __call__(self, r: jax.Array) -> jax.Array:
+        ng = self.sizes[0]
+        return self._vcycle(0, r.reshape(ng, ng)).reshape(-1)
+
+
+def make_mg_preconditioner(kappa: jax.Array, **kw):
+    """Factory matching the core.precond interface."""
+    mg = MultigridPreconditioner(kappa, **kw)
+    return lambda r: mg(r)

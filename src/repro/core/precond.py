@@ -1,0 +1,106 @@
+"""Preconditioners.
+
+The paper's pytorch-native backend supports only Jacobi (its stated
+limitation, §5).  We reproduce Jacobi faithfully and add two *beyond-paper*
+matvec-only preconditioners that suit TPU (no scalar triangular solves):
+block-Jacobi (dense MXU-sized diagonal blocks) and Chebyshev polynomial.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["identity", "jacobi", "block_jacobi", "chebyshev", "make_preconditioner"]
+
+
+def identity():
+    return lambda r: r
+
+
+def jacobi(diag: jax.Array, eps: float = 1e-30):
+    """M⁻¹ = D⁻¹ — the paper's default for the pytorch-native backend."""
+    inv = jnp.where(jnp.abs(diag) > eps, 1.0 / diag, 1.0)
+    return lambda r: inv * r
+
+
+def block_jacobi(val, row, col, n: int, block: int = 128):
+    """Dense-block diagonal inverse.  Blocks are MXU-aligned (default 128):
+    extraction is eager (concrete pattern), application is one batched matmul.
+    Beyond-paper: no TPU-hostile triangular solves, still much stronger than
+    point Jacobi on PDE matrices."""
+    nb = -(-n // block)
+    r = np.asarray(row); c = np.asarray(col); v = np.asarray(val)
+    blocks = np.zeros((nb, block, block), v.dtype)
+    same = (r // block) == (c // block)
+    rb = r[same] // block
+    blocks[rb, r[same] % block, c[same] % block] = v[same]
+    # regularize empty tail rows of the padded final block
+    for b_ in range(nb):
+        d = np.abs(np.diag(blocks[b_]))
+        fix = d < 1e-12
+        blocks[b_][np.where(fix)[0], np.where(fix)[0]] = 1.0
+    inv = jnp.asarray(np.linalg.inv(blocks))
+
+    def apply(rvec):
+        pad = nb * block - n
+        rp = jnp.pad(rvec, (0, pad)).reshape(nb, block)
+        out = jnp.einsum("bij,bj->bi", inv, rp).reshape(nb * block)
+        return out[:n]
+
+    return apply
+
+
+def chebyshev(matvec: Callable, lam_min: float, lam_max: float, degree: int = 8):
+    """Chebyshev-polynomial approximation of A⁻¹ on [lam_min, lam_max].
+
+    Pure matvec recurrence — ideal for TPU and for the distributed backend
+    (no extra reductions).  Beyond-paper addition."""
+    theta = 0.5 * (lam_max + lam_min)
+    delta = 0.5 * (lam_max - lam_min)
+    sigma = theta / delta
+
+    def apply(r):
+        # 3-term Chebyshev smoother recurrence approximating x ≈ A⁻¹ r
+        x = r / theta
+        rk = r - matvec(x)
+        rho_k = 1.0 / sigma
+        dk = x
+        for _ in range(degree - 1):
+            rho_k1 = 1.0 / (2.0 * sigma - rho_k)
+            dk = rho_k1 * rho_k * dk + (2.0 * rho_k1 / delta) * rk
+            x = x + dk
+            rk = rk - matvec(dk)
+            rho_k = rho_k1
+        return x
+
+    return apply
+
+
+def estimate_spectrum(matvec: Callable, n: int, dtype=jnp.float32,
+                      steps: int = 16, seed: int = 0):
+    """Lanczos-based extremal eigenvalue estimate for Chebyshev bounds."""
+    from .solvers import lanczos
+    v0 = jax.random.normal(jax.random.PRNGKey(seed), (n,), dtype)
+    a, b_, _ = lanczos(matvec, v0, steps)
+    T = jnp.diag(a) + jnp.diag(b_[:-1], 1) + jnp.diag(b_[:-1], -1)
+    w = jnp.linalg.eigvalsh(T)
+    return w[0], w[-1]
+
+
+def make_preconditioner(name: str, A, matvec: Callable):
+    """Factory used by dispatch: name ∈ {none, jacobi, block_jacobi, chebyshev}."""
+    if name in (None, "none", "identity"):
+        return identity()
+    if name == "jacobi":
+        return jacobi(A.diagonal())
+    if name == "block_jacobi":
+        return block_jacobi(A.val, A.row, A.col, A.shape[0])
+    if name == "chebyshev":
+        lmin, lmax = estimate_spectrum(matvec, A.shape[0], A.dtype)
+        lmin = jnp.maximum(lmin, lmax * 1e-4)
+        return chebyshev(matvec, lmin, lmax, degree=8)
+    raise ValueError(f"unknown preconditioner {name!r}")

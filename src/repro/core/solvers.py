@@ -1,0 +1,465 @@
+"""Solver kernels (paper §3.1, Appendix A).
+
+Every iterative solver is *matvec-parametric*: it takes a closure
+``matvec(x) -> Ax`` so the same loop serves the ``jnp`` (COO segment-sum),
+``pallas`` (block-ELL kernel), ``stencil`` (matrix-free) and ``dist``
+(halo-exchange) backends.  All loops are ``lax.while_loop`` — they are *not*
+reverse-differentiable, which is exactly the point: gradients always come from
+the O(1)-graph adjoint in :mod:`repro.core.adjoint`.
+
+``cg_scan`` is the deliberately-naive fixed-k differentiable CG used as the
+O(k)-graph baseline of paper Fig. 2 / Table 7.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = [
+    "SolveInfo", "cg", "bicgstab", "gmres", "cg_scan",
+    "dense_solve", "newton_solve", "picard_solve", "anderson_solve",
+    "lobpcg", "lanczos",
+]
+
+
+class SolveInfo(NamedTuple):
+    iters: jax.Array       # iterations executed
+    resnorm: jax.Array     # final ‖r‖₂
+    converged: jax.Array   # bool
+
+
+def _identity(x):
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Krylov solvers
+# ---------------------------------------------------------------------------
+
+def cg(matvec: Callable, b: jax.Array, x0: Optional[jax.Array] = None, *,
+       M: Callable = _identity, tol: float = 1e-6, atol: float = 0.0,
+       maxiter: int = 1000, min_iter: int = 0,
+       dot: Optional[Callable] = None):
+    """Preconditioned conjugate gradient (Hestenes–Stiefel).
+
+    Two inner products per iteration — the textbook form used by the paper
+    (Alg. 1).  See ``pipelined_cg`` in core/distributed.py for the
+    reduced-latency variant (beyond-paper).  ``dot`` is injectable so the
+    distributed backend can psum across the mesh (paper Alg. 1 all_reduce).
+    """
+    x0 = jnp.zeros_like(b) if x0 is None else x0
+    dot = dot or (lambda u, v: jnp.sum(u * v))
+    bnorm = jnp.sqrt(dot(b, b))
+    target = jnp.maximum(tol * bnorm, atol)
+
+    r0 = b - matvec(x0)
+    z0 = M(r0)
+    p0 = z0
+    rz0 = dot(r0, z0)
+
+    def cond(state):
+        x, r, p, rz, k = state
+        return (k < maxiter) & ((jnp.sqrt(dot(r, r)) > target) | (k < min_iter))
+
+    def body(state):
+        x, r, p, rz, k = state
+        Ap = matvec(p)
+        alpha = rz / dot(p, Ap)
+        x = x + alpha * p
+        r = r - alpha * Ap
+        z = M(r)
+        rz_new = dot(r, z)
+        p = z + (rz_new / rz) * p
+        return (x, r, p, rz_new, k + 1)
+
+    x, r, p, rz, k = lax.while_loop(cond, body, (x0, r0, p0, rz0, jnp.array(0)))
+    rn = jnp.sqrt(dot(r, r))
+    return x, SolveInfo(k, rn, rn <= target)
+
+
+def bicgstab(matvec: Callable, b: jax.Array, x0: Optional[jax.Array] = None, *,
+             M: Callable = _identity, tol: float = 1e-6, atol: float = 0.0,
+             maxiter: int = 1000, dot: Optional[Callable] = None):
+    """BiCGStab (van der Vorst 1992) for general (non-symmetric) systems."""
+    x0 = jnp.zeros_like(b) if x0 is None else x0
+    dot = dot or (lambda u, v: jnp.sum(u * v))
+    bnorm = jnp.sqrt(dot(b, b))
+    target = jnp.maximum(tol * bnorm, atol)
+    eps = jnp.asarray(1e-30, b.dtype)
+
+    r0 = b - matvec(x0)
+
+    def cond(st):
+        x, r, rhat, p, v, rho, alpha, omega, k, fresh = st
+        return (k < maxiter) & (jnp.sqrt(dot(r, r)) > target)
+
+    def body(st):
+        x, r, rhat, p, v, rho_prev, alpha, omega, k, fresh = st
+        rho = dot(rhat, r)
+        rr = dot(r, r)
+        # ρ-breakdown (r ⟂ r̂): restart with r̂ ← r (PETSc-style) instead of
+        # stagnating — BiCGStab otherwise stalls once <r̂,r> underflows.
+        restart = (jnp.abs(rho) < 1e-12 * rr) | fresh
+        rhat = jnp.where(restart, r, rhat)
+        rho = jnp.where(restart, rr, rho)
+        beta = (rho / (rho_prev + eps)) * (alpha / (omega + eps))
+        beta = jnp.where(restart, 0.0, beta)
+        p = jnp.where(restart, r, r + beta * (p - omega * v))
+        phat = M(p)
+        v = matvec(phat)
+        alpha = rho / (dot(rhat, v) + eps)
+        s = r - alpha * v
+        shat = M(s)
+        t = matvec(shat)
+        omega_new = dot(t, s) / (dot(t, t) + eps)
+        x = x + alpha * phat + omega_new * shat
+        r = s - omega_new * t
+        return (x, r, rhat, p, v, rho, alpha, omega_new, k + 1,
+                jnp.array(False))
+
+    z = jnp.zeros_like(b)
+    one = jnp.asarray(1.0, b.dtype)
+    st0 = (x0, r0, r0, z, z, one, one, one, jnp.array(0), jnp.array(True))
+    x, r, *_, k, _ = lax.while_loop(cond, body, st0)
+    rn = jnp.sqrt(dot(r, r))
+    return x, SolveInfo(k, rn, rn <= target)
+
+
+def gmres(matvec: Callable, b: jax.Array, x0: Optional[jax.Array] = None, *,
+          M: Callable = _identity, tol: float = 1e-6, atol: float = 0.0,
+          restart: int = 32, maxiter: int = 50):
+    """Restarted GMRES(m) with modified Gram–Schmidt Arnoldi.
+
+    ``maxiter`` counts outer restarts.  Static Krylov dimension ``restart``
+    keeps shapes fixed for jit.
+    """
+    x0 = jnp.zeros_like(b) if x0 is None else x0
+    n = b.shape[-1]
+    m = restart
+    dtype = b.dtype
+    bnorm = jnp.linalg.norm(b)
+    target = jnp.maximum(tol * bnorm, atol)
+
+    def arnoldi_cycle(x):
+        r = M(b - matvec(x))
+        beta = jnp.linalg.norm(r)
+        V = jnp.zeros((m + 1, n), dtype).at[0].set(r / (beta + 1e-30))
+        H = jnp.zeros((m + 1, m), dtype)
+
+        def step(carry, j):
+            V, H = carry
+            w = M(matvec(V[j]))
+
+            def mgs(i, w_h):
+                w, h = w_h
+                hij = jnp.where(i <= j, jnp.sum(w * V[i]), 0.0)
+                return (w - hij * V[i], h.at[i].set(hij))
+
+            w, hcol = lax.fori_loop(0, m + 1, mgs, (w, jnp.zeros(m + 1, dtype)))
+            hn = jnp.linalg.norm(w)
+            hcol = hcol.at[j + 1].set(hn)
+            V = V.at[j + 1].set(w / (hn + 1e-30))
+            H = H.at[:, j].set(hcol)
+            return (V, H), None
+
+        (V, H), _ = lax.scan(step, (V, H), jnp.arange(m))
+        # least squares min ‖βe₁ − Hy‖
+        e1 = jnp.zeros(m + 1, dtype).at[0].set(beta)
+        y, *_ = jnp.linalg.lstsq(H, e1, rcond=None)
+        return x + V[:m].T @ y
+
+    def cond(st):
+        x, k = st
+        r = b - matvec(x)
+        return (k < maxiter) & (jnp.linalg.norm(r) > target)
+
+    def body(st):
+        x, k = st
+        return (arnoldi_cycle(x), k + 1)
+
+    x, k = lax.while_loop(cond, body, (x0, jnp.array(0)))
+    rn = jnp.linalg.norm(b - matvec(x))
+    return x, SolveInfo(k * m, rn, rn <= target)
+
+
+def cg_scan(matvec: Callable, b: jax.Array, k: int,
+            M: Callable = _identity, x0: Optional[jax.Array] = None):
+    """Fixed-k CG via ``lax.scan`` — fully reverse-differentiable.
+
+    This is the *naive O(k)-graph baseline* of paper §4.2: reverse-mode
+    through the scan stores every per-iteration residual (O(k·n) memory),
+    exactly like autograd-tracked PyTorch CG.  Never used by the adjoint path.
+    """
+    x0 = jnp.zeros_like(b) if x0 is None else x0
+    dot = lambda u, v: jnp.sum(u * v)
+    r0 = b - matvec(x0)
+    z0 = M(r0)
+
+    rz0 = dot(r0, z0)
+    eps = jnp.finfo(b.dtype).eps
+    tiny = jnp.asarray((100 * eps) ** 2, b.dtype) * rz0
+
+    def step(carry, _):
+        x, r, p, rz = carry
+        Ap = matvec(p)
+        pAp = dot(p, Ap)
+        # guard: once converged (rz → 0) iterate as a no-op instead of 0/0.
+        # double-where keeps reverse-mode NaN-free (the unselected branch's
+        # denominator must be safe too) — the forced-k sweep of paper Fig. 2
+        # runs past convergence by design.
+        live = rz > tiny
+        pAp_safe = jnp.where(live, pAp, 1.0)
+        rz_safe = jnp.where(live, rz, 1.0)
+        alpha = jnp.where(live, rz / pAp_safe, 0.0)
+        x = x + alpha * p
+        r = r - alpha * Ap
+        z = M(r)
+        rz_new = dot(r, z)
+        beta = jnp.where(live, rz_new / rz_safe, 0.0)
+        p = z + beta * p
+        return (x, r, p, rz_new), None
+
+    (x, r, _, _), _ = lax.scan(step, (x0, r0, z0, dot(r0, z0)), None, length=k)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# dense direct backend (TPU: batched LU/Cholesky on the MXU)
+# ---------------------------------------------------------------------------
+
+def dense_solve(A_dense: jax.Array, b: jax.Array, method: str = "lu"):
+    if method == "cholesky":
+        L = jnp.linalg.cholesky(A_dense)
+        x = jax.scipy.linalg.cho_solve((L, True), b)
+    else:
+        x = jnp.linalg.solve(A_dense, b)
+    return x, SolveInfo(jnp.array(1), jnp.asarray(0.0, b.dtype), jnp.array(True))
+
+
+# ---------------------------------------------------------------------------
+# nonlinear solvers (paper §3.2.2, "Nonlinear systems")
+# ---------------------------------------------------------------------------
+
+def newton_solve(residual: Callable, x0: jax.Array, *, tol: float = 1e-8,
+                 maxiter: int = 50, dense_jacobian_budget: int = 2048,
+                 inner_tol: float = 1e-8, inner_maxiter: int = 500,
+                 damping: float = 1.0):
+    """Newton's method.  Small systems use a dense Jacobian (MXU solve);
+    large systems use matrix-free JVP-Krylov (BiCGStab) inner solves."""
+    n = x0.shape[-1]
+    use_dense = n <= dense_jacobian_budget
+
+    def cond(st):
+        x, k, rn = st
+        return (k < maxiter) & (rn > tol)
+
+    def body(st):
+        x, k, _ = st
+        F = residual(x)
+        if use_dense:
+            J = jax.jacfwd(residual)(x)
+            dx = jnp.linalg.solve(J, -F)
+        else:
+            mv = lambda v: jax.jvp(residual, (x,), (v,))[1]
+            dx, _ = bicgstab(mv, -F, tol=inner_tol, maxiter=inner_maxiter)
+        x = x + damping * dx
+        rn = jnp.linalg.norm(residual(x))
+        return (x, k + 1, rn)
+
+    rn0 = jnp.linalg.norm(residual(x0))
+    x, k, rn = lax.while_loop(cond, body, (x0, jnp.array(0), rn0))
+    return x, SolveInfo(k, rn, rn <= tol)
+
+
+def picard_solve(fixed_point: Callable, x0: jax.Array, *, tol: float = 1e-8,
+                 maxiter: int = 500, relax: float = 1.0):
+    """Damped fixed-point (Picard) iteration x ← (1−ω)x + ω G(x)."""
+    def cond(st):
+        x, k, rn = st
+        return (k < maxiter) & (rn > tol)
+
+    def body(st):
+        x, k, _ = st
+        x_new = (1 - relax) * x + relax * fixed_point(x)
+        rn = jnp.linalg.norm(x_new - x)
+        return (x_new, k + 1, rn)
+
+    x, k, rn = lax.while_loop(cond, body, (x0, jnp.array(0), jnp.inf))
+    return x, SolveInfo(k, rn, rn <= tol)
+
+
+def anderson_solve(fixed_point: Callable, x0: jax.Array, *, m: int = 5,
+                   tol: float = 1e-8, maxiter: int = 200, beta: float = 1.0,
+                   ridge: float = 1e-12):
+    """Anderson acceleration, type-II difference form (Walker & Ni 2011):
+
+        f_k = G(x_k) − x_k
+        γ   = argmin ‖f_k − ΔF γ‖²  (ridge-regularized, window m)
+        x⁺  = x_k + β f_k − (ΔX + β ΔF) γ
+
+    Convergence is checked on ‖f_k‖ (the true fixed-point residual)."""
+    n = x0.shape[-1]
+    dtype = x0.dtype
+    Xh = jnp.zeros((m + 1, n), dtype)   # iterate history (last row = newest)
+    Fh = jnp.zeros((m + 1, n), dtype)   # residual history
+
+    def cond(st):
+        x, Xh, Fh, k, rn = st
+        return (k < maxiter) & (rn > tol)
+
+    def body(st):
+        x, Xh, Fh, k, _ = st
+        f = fixed_point(x) - x
+        rn = jnp.linalg.norm(f)
+        Xh = jnp.roll(Xh, -1, axis=0).at[-1].set(x)
+        Fh = jnp.roll(Fh, -1, axis=0).at[-1].set(f)
+        dX = Xh[1:] - Xh[:-1]                    # (m, n) rows: Δx_i
+        dF = Fh[1:] - Fh[:-1]
+        mk = jnp.minimum(k, m)                   # number of valid diffs
+        valid = (jnp.arange(m) >= (m - mk))[:, None]
+        dXv = jnp.where(valid, dX, 0.0)
+        dFv = jnp.where(valid, dF, 0.0)
+        gram = dFv @ dFv.T + ridge * jnp.eye(m, dtype=dtype)
+        gamma = jnp.linalg.solve(gram, dFv @ f)
+        x_new = x + beta * f - gamma @ (dXv + beta * dFv)
+        return (x_new, Xh, Fh, k + 1, rn)
+
+    x, Xh, Fh, k, rn = lax.while_loop(
+        cond, body, (x0, Xh, Fh, jnp.array(0), jnp.asarray(jnp.inf, dtype)))
+    return x, SolveInfo(k, rn, rn <= tol)
+
+
+# ---------------------------------------------------------------------------
+# eigensolvers (paper §3.2.2 "Eigenvalue problems", §4.3 LOBPCG/Lanczos)
+# ---------------------------------------------------------------------------
+
+def lobpcg_general(matvec: Callable, X0: jax.Array, *,
+                   gram: Optional[Callable] = None, M: Callable = _identity,
+                   tol: float = 1e-6, maxiter: int = 200,
+                   largest: bool = False):
+    """Locally optimal block preconditioned CG (Knyazev 2001), block form.
+
+    ``X0``: (k, n_local) initial block (rows are vectors).  ``gram(S1, S2)``
+    computes S1 S2ᵀ with a global reduction — inject a psum'd version for the
+    distributed backend (all row-space arithmetic is s×s and replicated).
+
+    Robustness: the [X | W | P] subspace is orthonormalized by pseudo-inverse
+    whitening of its Gram matrix (rank-deficient directions are masked and
+    their Ritz values pushed to +inf), and the conjugate block P uses the
+    classical coefficient split (its component in the non-X blocks).
+    """
+    k, n = X0.shape
+    dtype = X0.dtype
+    sign = -1.0 if largest else 1.0
+    mv = (lambda v: sign * matvec(v))
+    gram = gram or (lambda S1, S2: S1 @ S2.T)
+    BIG = jnp.asarray(1e30, dtype)
+
+    def rr(S):
+        """Rayleigh–Ritz on the (possibly rank-deficient) row space of S.
+
+        Whitening in the *eigenbasis* of the Gram matrix (Q = Λ^{-1/2}Vᵀ S)
+        makes Q's rows exactly orthonormal on the good directions and exactly
+        zero on null ones, so rank deficiency reduces to masking diagonal
+        slots of the projected T."""
+        G = gram(S, S)
+        e, V = jnp.linalg.eigh(G)
+        good = e > jnp.maximum(e[-1], 1e-30) * 1e-10
+        isq = jnp.where(good, 1.0 / jnp.sqrt(jnp.maximum(e, 1e-300)), 0.0)
+        W_ = isq[:, None] * V.T                    # Λ^{-1/2} Vᵀ
+        Q = W_ @ S                                  # QQᵀ = diag(good)
+        AQ = jax.vmap(mv)(Q)
+        T = gram(Q, AQ)
+        T = 0.5 * (T + T.T)
+        T = T + jnp.diag(jnp.where(good, 0.0, BIG))
+        w, U = jnp.linalg.eigh(T)
+        C = V @ (isq[:, None] * U[:, :k])           # coefficients in S rows
+        X_new = C.T @ S
+        return w[:k], X_new, C
+
+    w0, X, _ = rr(X0)
+    P = jnp.zeros_like(X)
+
+    def cond(st):
+        X, w, P, k_it, rn = st
+        return (k_it < maxiter) & (rn > tol)
+
+    def body(st):
+        X, w, P, k_it, _ = st
+        AX = jax.vmap(mv)(X)
+        R = AX - w[:, None] * X
+        rr_norms = jnp.sqrt(jnp.diag(gram(R, R)))
+        rn = jnp.max(rr_norms / (jnp.abs(w) + 1.0))
+        Wp = jax.vmap(M)(R)
+        # explicit inter-block orthogonalization (conditioning of S):
+        Wp = Wp - gram(Wp, X) @ X
+        Wn = jnp.sqrt(jnp.maximum(jnp.diag(gram(Wp, Wp)), 1e-300))
+        Wp = Wp / Wn[:, None]
+        P = P - gram(P, X) @ X
+        Pn = jnp.sqrt(jnp.diag(gram(P, P)))
+        P = jnp.where(Pn[:, None] > 1e-150, P / jnp.maximum(Pn, 1e-300)[:, None], P)
+        S = jnp.concatenate([X, Wp, P], axis=0)
+        w_new, X_new, C = rr(S)
+        P_new = C[k:].T @ S[k:]                    # non-X component
+        return (X_new, w_new, P_new, k_it + 1, rn)
+
+    X, w, P, k_it, rn = lax.while_loop(
+        cond, body, (X, w0, P, jnp.array(0), jnp.asarray(jnp.inf, dtype)))
+    nrm = jnp.sqrt(jnp.diag(gram(X, X)))
+    X = X / nrm[:, None]
+    return sign * w, X, SolveInfo(k_it, rn, rn <= tol)
+
+
+def lobpcg(matvec: Callable, X0: jax.Array, *, M: Callable = _identity,
+           tol: float = 1e-6, maxiter: int = 200, largest: bool = False):
+    """Single-device LOBPCG — see :func:`lobpcg_general`."""
+    return lobpcg_general(matvec, X0, M=M, tol=tol, maxiter=maxiter,
+                          largest=largest)
+
+
+def lanczos(matvec: Callable, v0: jax.Array, num_steps: int):
+    """Lanczos tridiagonalization with full reorthogonalization (small m).
+
+    Returns (alphas, betas, V) — eigenvalues of T approximate extremal
+    eigenvalues of A.  Used for Chebyshev-bound estimation and as an
+    alternative ``eigsh`` method.
+    """
+    n = v0.shape[-1]
+    m = num_steps
+    dtype = v0.dtype
+    V = jnp.zeros((m + 1, n), dtype)
+    V = V.at[0].set(v0 / jnp.linalg.norm(v0))
+    alphas = jnp.zeros(m, dtype)
+    betas = jnp.zeros(m, dtype)
+
+    def step(carry, j):
+        V, alphas, betas = carry
+        w = matvec(V[j])
+        alpha = jnp.sum(w * V[j])
+        w = w - alpha * V[j] - jnp.where(j > 0, betas[jnp.maximum(j - 1, 0)], 0.0) * V[jnp.maximum(j - 1, 0)]
+        # full reorthogonalization (numerical hygiene at small m)
+        proj = V @ w                       # (m+1,)
+        mask = (jnp.arange(m + 1) <= j)
+        w = w - (jnp.where(mask, proj, 0.0)[None, :] @ V).reshape(n)
+        beta = jnp.linalg.norm(w)
+        V = V.at[j + 1].set(w / (beta + 1e-30))
+        return (V, alphas.at[j].set(alpha), betas.at[j].set(beta)), None
+
+    (V, alphas, betas), _ = lax.scan(step, (V, alphas, betas), jnp.arange(m))
+    return alphas, betas, V
+
+
+def eigsh_lanczos(matvec: Callable, n: int, k: int, *, num_steps: int = 64,
+                  dtype=jnp.float32, seed: int = 0):
+    """k smallest eigenpairs via Lanczos + dense eigh of T, Ritz vectors."""
+    v0 = jax.random.normal(jax.random.PRNGKey(seed), (n,), dtype)
+    alphas, betas, V = lanczos(matvec, v0, num_steps)
+    T = (jnp.diag(alphas) + jnp.diag(betas[:-1], 1) + jnp.diag(betas[:-1], -1))
+    w, U = jnp.linalg.eigh(T)
+    ritz = (V[:num_steps].T @ U[:, :k]).T      # (k, n)
+    ritz = ritz / jnp.linalg.norm(ritz, axis=1, keepdims=True)
+    return w[:k], ritz

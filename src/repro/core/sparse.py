@@ -1,0 +1,361 @@
+"""Typed sparse tensors (paper §3.1).
+
+``SparseTensor``      — one matrix, or a batch sharing one sparsity pattern (COO).
+``SparseTensorList``  — a batch with *distinct* patterns (ragged dispatch).
+
+Distributed variants (``DSparseTensor``) live in :mod:`repro.core.distributed`.
+
+The COO triplet ``(val, row, col)`` is the canonical storage; auxiliary
+TPU-friendly forms (block-ELL for the Pallas SpMV kernel, structured-stencil
+metadata) are attached at construction time when the pattern allows it.
+``val`` may carry leading batch dimensions — the pattern is shared across the
+batch and a single symbolic setup (BELL layout / dispatch decision) is reused,
+mirroring torch-sla's shared-pattern batching.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "SparseTensor",
+    "SparseTensorList",
+    "coo_matvec",
+    "coo_to_dense",
+    "detect_properties",
+    "build_bell",
+]
+
+
+# ---------------------------------------------------------------------------
+# low-level COO kernels (autodiff-safe, XLA-fused)
+# ---------------------------------------------------------------------------
+
+def coo_matvec(val: jax.Array, row: jax.Array, col: jax.Array, x: jax.Array,
+               n_rows: int) -> jax.Array:
+    """y = A @ x for COO A.  Supports leading batch dims on ``val``/``x``.
+
+    Uses ``segment_sum`` (sorted-by-row patterns get the fast path; unsorted
+    still correct).  This is the ``jnp`` backend's SpMV and the oracle for the
+    Pallas kernels.
+    """
+    if val.ndim == 1 and x.ndim == 1:
+        return jax.ops.segment_sum(val * x[col], row, num_segments=n_rows)
+    # broadcast batch dims: val (..., nnz), x (..., n)
+    batch_shape = jnp.broadcast_shapes(val.shape[:-1], x.shape[:-1])
+    val = jnp.broadcast_to(val, batch_shape + val.shape[-1:])
+    x = jnp.broadcast_to(x, batch_shape + x.shape[-1:])
+    flat_v = val.reshape((-1, val.shape[-1]))
+    flat_x = x.reshape((-1, x.shape[-1]))
+    y = jax.vmap(lambda v, xx: jax.ops.segment_sum(v * xx[col], row,
+                                                   num_segments=n_rows))(flat_v, flat_x)
+    return y.reshape(batch_shape + (n_rows,))
+
+
+def coo_rmatvec(val, row, col, y, n_cols):
+    """x = Aᵀ @ y — transpose is a row/col swap (paper Eq. 6 uses this)."""
+    return coo_matvec(val, col, row, y, n_cols)
+
+
+def coo_to_dense(val, row, col, shape):
+    n, m = shape
+    base = jnp.zeros(val.shape[:-1] + (n, m), dtype=val.dtype)
+    return base.at[..., row, col].add(val)
+
+
+def coo_diagonal(val, row, col, n):
+    mask = (row == col)
+    return jax.ops.segment_sum(jnp.where(mask, val, 0.0), row, num_segments=n)
+
+
+# ---------------------------------------------------------------------------
+# pattern analysis (eager / numpy — runs once at construction)
+# ---------------------------------------------------------------------------
+
+def detect_properties(val, row, col, shape, check_values: bool = True) -> dict:
+    """Detect structural symmetry / SPD-likelihood.
+
+    Mirrors torch-sla's automatic upgrade of LU → Cholesky/LDLT.  Value-level
+    checks only run when ``val`` is a concrete (non-traced) array.
+    """
+    props = {"symmetric": False, "spd_hint": False, "sorted_rows": False}
+    if shape[0] != shape[1]:
+        return props
+    try:
+        r = np.asarray(row)
+        c = np.asarray(col)
+    except Exception:  # traced
+        return props
+    props["sorted_rows"] = bool(np.all(np.diff(r) >= 0))
+    key_f = (r.astype(np.int64) * shape[1] + c)
+    key_t = (c.astype(np.int64) * shape[1] + r)
+    of, ot = np.argsort(key_f), np.argsort(key_t)
+    if not np.array_equal(key_f[of], key_t[ot]):
+        return props  # pattern not symmetric
+    sym = True
+    if check_values:
+        try:
+            v = np.asarray(val)
+        except Exception:
+            v = None
+        if v is not None and not isinstance(val, jax.core.Tracer):
+            vf = v[..., of]
+            vt = v[..., ot]
+            sym = bool(np.allclose(vf, vt, rtol=1e-12, atol=1e-12))
+            if sym:
+                # cheap SPD hint: all diagonal entries present and positive
+                dmask = r == c
+                diag = np.zeros(v.shape[:-1] + (shape[0],), v.dtype)
+                flat = diag.reshape(-1, shape[0])
+                vflat = v.reshape(-1, v.shape[-1])
+                for b in range(flat.shape[0]):
+                    np.add.at(flat[b], r[dmask], vflat[b][dmask])
+                props["spd_hint"] = bool(np.all(flat > 0))
+    props["symmetric"] = sym
+    return props
+
+
+# ---------------------------------------------------------------------------
+# block-ELL construction for the Pallas SpMV kernel
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BellMeta:
+    """Static layout of a block-ELL matrix (see kernels/spmv_bell.py)."""
+    bm: int            # rows per row-band
+    bn: int            # cols per column block (128-aligned)
+    n_rb: int          # number of row bands
+    n_cb: int          # number of column blocks
+    k: int             # blocks per row band (padded)
+    n_pad: int         # padded row count
+    m_pad: int         # padded col count
+    fill: float        # nnz / (n_rb*k*bm*bn) — padding efficiency
+
+
+def build_bell(row, col, shape, bm: int = 8, bn: int = 128,
+               max_k: Optional[int] = None):
+    """Build block-ELLPACK layout: per row-band, the list of non-empty column
+    blocks (padded to k) plus a scatter map from COO nnz → dense block slots.
+
+    Returns ``(meta, block_cols[int32 (n_rb,k)], perm[int32 (nnz,)])`` where
+    ``perm[e]`` is the flat index into the (n_rb,k,bm,bn) value tensor for COO
+    entry e.  Values are materialized per-call with a scatter so gradients flow
+    through the same COO ``val`` regardless of kernel.
+    """
+    r = np.asarray(row).astype(np.int64)
+    c = np.asarray(col).astype(np.int64)
+    n, m = shape
+    n_rb = -(-n // bm)
+    n_cb = -(-m // bn)
+    rb = r // bm
+    cb = c // bn
+    # unique (row-band, col-block) pairs
+    key = rb * n_cb + cb
+    uniq, inv = np.unique(key, return_inverse=True)
+    u_rb = uniq // n_cb
+    u_cb = uniq % n_cb
+    counts = np.bincount(u_rb, minlength=n_rb)
+    k = int(counts.max()) if counts.size else 1
+    if max_k is not None:
+        k = min(k, max_k)
+    # slot index of each unique block within its row band
+    order = np.argsort(u_rb, kind="stable")
+    slot = np.zeros_like(u_rb)
+    slot_sorted = np.concatenate([np.arange(cnt) for cnt in counts]) if counts.size else np.zeros(0, np.int64)
+    slot[order] = slot_sorted
+    block_cols = np.zeros((n_rb, k), np.int32)
+    block_cols[u_rb, np.minimum(slot, k - 1)] = u_cb.astype(np.int32)
+    # scatter map: COO entry e → flat slot in (n_rb, k, bm, bn)
+    e_slot = slot[inv]
+    keep = e_slot < k
+    e_rb = rb
+    e_lr = r % bm
+    e_lc = c % bn
+    perm = ((e_rb * k + e_slot) * bm + e_lr) * bn + e_lc
+    perm = np.where(keep, perm, -1).astype(np.int64)
+    fill = float(len(r)) / float(max(n_rb * k * bm * bn, 1))
+    meta = BellMeta(bm=bm, bn=bn, n_rb=int(n_rb), n_cb=int(n_cb), k=int(k),
+                    n_pad=int(n_rb * bm), m_pad=int(n_cb * bn), fill=fill)
+    return meta, jnp.asarray(block_cols), jnp.asarray(perm)
+
+
+# ---------------------------------------------------------------------------
+# SparseTensor
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+class SparseTensor:
+    """A sparse matrix (or shared-pattern batch) with autograd-aware solvers.
+
+    Construction is eager w.r.t. the *pattern* (row/col as concrete arrays);
+    values may later be replaced by traced arrays (``with_values``) so the
+    same object works inside jit/grad — mirroring torch-sla, where the pattern
+    defines one symbolic setup reused across a batch or a training loop.
+    """
+
+    def __init__(self, val, row, col, shape: Sequence[int], *,
+                 props: Optional[dict] = None,
+                 bell: Optional[tuple] = None,
+                 stencil: Optional[Any] = None,
+                 build_kernel_layout: bool = False,
+                 validate: bool = True):
+        val = jnp.asarray(val) if not isinstance(val, jax.core.Tracer) else val
+        self.val = val
+        self.row = jnp.asarray(row, dtype=jnp.int32)
+        self.col = jnp.asarray(col, dtype=jnp.int32)
+        self.shape = tuple(int(s) for s in shape)
+        if validate and not isinstance(val, jax.core.Tracer):
+            assert val.shape[-1] == self.row.shape[0] == self.col.shape[0], (
+                f"nnz mismatch: val {val.shape}, row {self.row.shape}")
+        self.props = props if props is not None else detect_properties(
+            val, self.row, self.col, self.shape)
+        self.stencil = stencil
+        if bell is not None:
+            self.bell = bell
+        elif build_kernel_layout:
+            self.bell = build_bell(self.row, self.col, self.shape)
+        else:
+            self.bell = None
+
+    # -- pytree protocol ----------------------------------------------------
+    def tree_flatten(self):
+        bell_children = self.bell[1:] if self.bell is not None else ()
+        children = (self.val, self.row, self.col) + tuple(bell_children)
+        aux = (self.shape, _freeze(self.props),
+               self.bell[0] if self.bell is not None else None, self.stencil)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        shape, props, bell_meta, stencil = aux
+        val, row, col = children[:3]
+        obj = cls.__new__(cls)
+        obj.val, obj.row, obj.col = val, row, col
+        obj.shape = shape
+        obj.props = dict(props)
+        obj.stencil = stencil
+        obj.bell = (bell_meta,) + tuple(children[3:]) if bell_meta is not None else None
+        return obj
+
+    # -- basic ops ----------------------------------------------------------
+    @property
+    def nnz(self) -> int:
+        return self.row.shape[0]
+
+    @property
+    def n(self) -> int:
+        return self.shape[0]
+
+    @property
+    def batch_shape(self):
+        return self.val.shape[:-1]
+
+    @property
+    def dtype(self):
+        return self.val.dtype
+
+    @property
+    def T(self) -> "SparseTensor":
+        return SparseTensor(self.val, self.col, self.row,
+                            (self.shape[1], self.shape[0]),
+                            props=self.props, validate=False)
+
+    def with_values(self, val) -> "SparseTensor":
+        """Same pattern, new (possibly traced) values."""
+        obj = SparseTensor.__new__(SparseTensor)
+        obj.val, obj.row, obj.col = val, self.row, self.col
+        obj.shape, obj.props = self.shape, dict(self.props)
+        obj.bell, obj.stencil = self.bell, self.stencil
+        return obj
+
+    def matvec(self, x, *, backend: Optional[str] = None):
+        from . import dispatch
+        return dispatch.matvec(self, x, backend=backend)
+
+    def __matmul__(self, x):
+        return self.matvec(x)
+
+    def rmatvec(self, y):
+        return coo_rmatvec(self.val, self.row, self.col, y, self.shape[1])
+
+    def todense(self):
+        return coo_to_dense(self.val, self.row, self.col, self.shape)
+
+    def diagonal(self):
+        return coo_diagonal(self.val, self.row, self.col, self.shape[0])
+
+    # -- solvers (autograd-aware; see core/adjoint.py) ----------------------
+    def solve(self, b, *, backend: Optional[str] = None,
+              method: Optional[str] = None, tol: float = 1e-6,
+              atol: float = 0.0, maxiter: Optional[int] = None,
+              precond: str = "jacobi", x0=None):
+        from . import adjoint, dispatch
+        cfg = dispatch.make_config(self, backend=backend, method=method,
+                                   tol=tol, atol=atol, maxiter=maxiter,
+                                   precond=precond)
+        return adjoint.sparse_solve(cfg, self, b, x0)
+
+    def eigsh(self, k: int = 6, *, method: str = "lobpcg", tol: float = 1e-6,
+              maxiter: int = 200, compute_vector_grads: bool = True):
+        from . import adjoint
+        return adjoint.sparse_eigsh(self, k, method=method, tol=tol,
+                                    maxiter=maxiter,
+                                    compute_vector_grads=compute_vector_grads)
+
+    def slogdet(self):
+        """Dense-only log-determinant (documented as non-scaling, paper §3.3)."""
+        from . import adjoint
+        return adjoint.sparse_slogdet(self)
+
+    def __repr__(self):
+        return (f"SparseTensor(shape={self.shape}, nnz={self.nnz}, "
+                f"batch={self.batch_shape}, dtype={self.dtype}, "
+                f"sym={self.props.get('symmetric')}, bell={self.bell is not None})")
+
+
+def _freeze(d: dict):
+    return tuple(sorted(d.items()))
+
+
+# ---------------------------------------------------------------------------
+# SparseTensorList — distinct sparsity patterns
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+class SparseTensorList:
+    """A batch of matrices with *distinct* patterns (GNN minibatches, irregular
+    meshes).  Each element dispatches independently with an isolated adjoint —
+    semantics match torch-sla's SparseTensorList."""
+
+    def __init__(self, tensors: Sequence[SparseTensor]):
+        self.tensors = list(tensors)
+
+    def tree_flatten(self):
+        return tuple(self.tensors), len(self.tensors)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        obj = cls.__new__(cls)
+        obj.tensors = list(children)
+        return obj
+
+    def __len__(self):
+        return len(self.tensors)
+
+    def __getitem__(self, i):
+        return self.tensors[i]
+
+    def solve(self, bs, **kw):
+        assert len(bs) == len(self.tensors)
+        return [A.solve(b, **kw) for A, b in zip(self.tensors, bs)]
+
+    def matvec(self, xs):
+        return [A.matvec(x) for A, x in zip(self.tensors, xs)]
+
+    def eigsh(self, k: int = 6, **kw):
+        return [A.eigsh(k, **kw) for A in self.tensors]

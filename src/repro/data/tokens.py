@@ -1,0 +1,42 @@
+"""Synthetic token pipeline.
+
+Deterministic, restart-safe, host-shardable: batch for step ``s`` is a pure
+function of (seed, s), so resuming from a checkpoint reproduces the exact
+stream with no iterator state to persist — and an elastic restart on a
+different data-parallel size re-slices the same global batch.
+"""
+from __future__ import annotations
+
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def synthetic_batch(seed: int, step: int, batch: int, seq: int, vocab: int,
+                    dtype=jnp.int32) -> dict:
+    """Global batch for one step: zipf-ish marginals + a copy structure so a
+    real model can actually reduce loss (tokens repeat with lag 64)."""
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    k1, k2 = jax.random.split(key)
+    u = jax.random.uniform(k1, (batch, seq))
+    # zipf via inverse-CDF approximation on ranks
+    ranks = jnp.floor(jnp.exp(u * jnp.log(float(vocab)))).astype(dtype)
+    toks = jnp.clip(ranks - 1, 0, vocab - 1)
+    lag = 64
+    if seq > lag:
+        copy_mask = jax.random.bernoulli(k2, 0.5, (batch, seq - lag))
+        tail = jnp.where(copy_mask, toks[:, :-lag], toks[:, lag:])
+        toks = jnp.concatenate([toks[:, :lag], tail], axis=1)
+    inputs = toks[:, :-1]
+    targets = toks[:, 1:]
+    return {"tokens": inputs, "labels": targets}
+
+
+def token_stream(seed: int, batch: int, seq: int, vocab: int,
+                 start_step: int = 0) -> Iterator[dict]:
+    step = start_step
+    while True:
+        yield synthetic_batch(seed, step, batch, seq, vocab)
+        step += 1

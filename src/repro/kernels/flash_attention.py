@@ -1,0 +1,114 @@
+"""Pallas TPU kernel: flash attention (online-softmax, causal/bidir).
+
+The LM substrate's perf-critical hotspot.  The CPU dry-run uses the pure-jnp
+query-chunked attention (models/attention.py) so HLO stays portable; on TPU
+this kernel replaces it — O(block) VMEM, no (S,T) score materialization,
+MXU-aligned (bq×d)·(d×bk) tiles.
+
+Layout per grid step (bh, i, j):
+    q   (1, bq, d)   — query block i of batch·head bh
+    k,v (1, bk, d)   — KV block j
+    scratch: m (bq,), l (bq,), acc (bq, d)  — running max / denom / output
+The KV dimension is the innermost grid axis; scratch carries the online
+softmax state across j and the output is normalized at the last block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, causal: bool, bq: int, bk: int, nk: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    i = pl.program_id(1)
+    run = True
+    if causal:
+        # skip blocks strictly above the diagonal
+        run = (j * bk) <= (i * bq + bq - 1)
+
+    @pl.when(run if causal else (j >= 0))
+    def _step():
+        q = q_ref[0].astype(jnp.float32)
+        k = k_ref[0].astype(jnp.float32)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+        if causal:
+            qi = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kj = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(kj <= qi, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1)
+        acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                        + jax.lax.dot(p, v))
+        m_ref[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "bq", "bk", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, bq: int = 128, bk: int = 128,
+                    interpret: bool = True) -> jax.Array:
+    """q,k,v: (BH, S, d) with KV already expanded to query heads.
+    Returns (BH, S, d).  S must divide bq/bk (pad externally)."""
+    BH, S, d = q.shape
+    T = k.shape[1]
+    bq = min(bq, S)
+    bk = min(bk, T)
+    nq = S // bq
+    nk = T // bk
+    assert nq * bq == S and nk * bk == T, "pad S/T to block multiples"
+    scale = 1.0 / (d ** 0.5)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal, bq=bq, bk=bk,
+                          nk=nk),
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True) -> jax.Array:
+    """Pure-jnp oracle."""
+    d = q.shape[-1]
+    s = jnp.einsum("bsd,btd->bst", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (d ** 0.5)
+    if causal:
+        S, T = s.shape[-2:]
+        mask = jnp.arange(T)[None, :] <= jnp.arange(S)[:, None]
+        s = jnp.where(mask[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bst,btd->bsd", p, v.astype(jnp.float32)).astype(q.dtype)

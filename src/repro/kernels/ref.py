@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Each kernel in this package has its reference implementation here; tests
+sweep shapes/dtypes and ``assert_allclose`` kernel-vs-ref (interpret mode on
+CPU, compiled on TPU).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def stencil5_ref(val5: jax.Array, x: jax.Array) -> jax.Array:
+    """Variable-coefficient 5-point stencil apply.
+
+    ``val5``: (5, nx, ny) signed coefficient planes ordered (C, N, S, W, E);
+    ``x``: (nx, ny).  Out-of-domain coefficients are zero by construction, so
+    clamped shifts never contribute.
+
+        y[i,j] = C·x[i,j] + N·x[i-1,j] + S·x[i+1,j] + W·x[i,j-1] + E·x[i,j+1]
+    """
+    xn = jnp.pad(x, ((1, 0), (0, 0)))[:-1, :]   # x[i-1, j]
+    xs = jnp.pad(x, ((0, 1), (0, 0)))[1:, :]    # x[i+1, j]
+    xw = jnp.pad(x, ((0, 0), (1, 0)))[:, :-1]   # x[i, j-1]
+    xe = jnp.pad(x, ((0, 0), (0, 1)))[:, 1:]    # x[i, j+1]
+    return (val5[0] * x + val5[1] * xn + val5[2] * xs
+            + val5[3] * xw + val5[4] * xe)
+
+
+def bell_matvec_ref(bell_vals: jax.Array, block_cols: jax.Array,
+                    x_pad: jax.Array, n: int) -> jax.Array:
+    """Block-ELL SpMV oracle.
+
+    ``bell_vals``: (n_rb, k, bm, bn) dense blocks; ``block_cols``: (n_rb, k)
+    column-block ids; ``x_pad``: (m_pad,).  Returns y (n,).
+    """
+    n_rb, k, bm, bn = bell_vals.shape
+    xb = x_pad.reshape(-1, bn)                       # (n_cb, bn)
+    gathered = xb[block_cols]                        # (n_rb, k, bn)
+    y = jnp.einsum("rkab,rkb->ra", bell_vals, gathered)
+    return y.reshape(n_rb * bm)[:n]

@@ -1,0 +1,66 @@
+"""Pallas TPU kernel: block-ELLPACK SpMV with scalar-prefetch column gather.
+
+TPU adaptation of general (unstructured) sparse SpMV.  GPU CSR kernels key on
+warp-per-row scalar gathers; the TPU equivalent is **dense value tiles +
+scalar-prefetched block indices**: the (n_rb, k) column-block table is
+prefetched into SMEM before the grid runs, so each x block arrives via the
+BlockSpec ``index_map`` (a DMA the compiler can pipeline), and the inner
+product is a dense (bm, bn)·(bn,) contraction on VMEM-resident tiles.
+
+Grid: (n_rb, k) — the output band is revisited across the k slot dimension
+and accumulated in place (out index_map constant in k, initialized at slot 0).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..core.sparse import BellMeta
+
+
+def _kernel(cols_ref, vals_ref, x_ref, y_ref):
+    s = pl.program_id(1)
+
+    @pl.when(s == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    blk = vals_ref[0, 0]            # (bm, bn)
+    xv = x_ref[0]                   # (bn,)
+    y_ref[0, :] += jnp.dot(blk, xv, preferred_element_type=y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 4))
+def bell_spmv_pallas(meta: BellMeta, block_cols: jax.Array,
+                     bell_vals: jax.Array, x: jax.Array,
+                     interpret: bool = True) -> jax.Array:
+    """y = A @ x with A in block-ELL form.
+
+    ``block_cols``: (n_rb, k) int32 column-block table (scalar-prefetched);
+    ``bell_vals``: (n_rb, k, bm, bn); ``x``: (m,) — padded internally.
+    Returns the padded y (n_pad,); ops.py truncates to n.
+    """
+    bm, bn, k, n_rb = meta.bm, meta.bn, meta.k, meta.n_rb
+    xp = jnp.pad(x, (0, meta.m_pad - x.shape[0]))
+    x2 = xp.reshape(meta.n_cb, bn)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_rb, k),
+        in_specs=[
+            pl.BlockSpec((1, 1, bm, bn), lambda r, s, cols: (r, s, 0, 0)),
+            pl.BlockSpec((1, bn), lambda r, s, cols: (cols[r, s], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bm), lambda r, s, cols: (r, 0)),
+    )
+    out = pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_rb, bm), x.dtype),
+        interpret=interpret,
+    )(block_cols.astype(jnp.int32), bell_vals, x2)
+    return out.reshape(meta.n_pad)

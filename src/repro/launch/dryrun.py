@@ -1,0 +1,208 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: prove the distribution config is coherent without
+hardware.
+
+For every (architecture × input shape) cell, on the single-pod 16×16 mesh and
+the 2×16×16 multi-pod mesh:
+
+    lowered  = jax.jit(step, in_shardings=…, out_shardings=…).lower(**specs)
+    compiled = lowered.compile()
+    print(compiled.memory_analysis())     # fits?
+    print(compiled.cost_analysis())       # FLOPs/bytes → §Roofline
+
+Results append to a JSONL ledger (results/dryrun.jsonl) consumed by
+EXPERIMENTS.md §Dry-run and §Roofline.  long_500k is skipped (and recorded
+as such) for pure full-attention archs per DESIGN.md §Arch-applicability.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
+             variant: str = "baseline") -> dict:
+    from ..configs import SHAPES, get_config, is_subquadratic
+    from ..models import transformer as T
+    from ..optim.adamw import AdamWConfig, init_opt_state
+    from . import roofline as R
+    from . import shardings as sh
+    from .mesh import make_production_mesh
+    from .specs import batch_specs, decode_specs
+    from .train import jit_train_step
+    from .serve import jit_serve_step
+    from .variants import VARIANTS
+
+    rules_builder, cfg_transform = VARIANTS[variant]
+    cfg = cfg_transform(get_config(arch))
+    shape = SHAPES[shape_name]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "rules": variant, "kind": shape.kind}
+
+    if shape_name == "long_500k" and not is_subquadratic(cfg):
+        rec.update(status="skipped",
+                   reason="pure full-attention arch — quadratic at 524k "
+                          "(DESIGN.md §Arch-applicability)")
+        return rec
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    rules = rules_builder(mesh)
+    pshapes = T.param_shapes(cfg)
+    n_params = sum(int(jnp.prod(jnp.array(x.shape)))
+                   for x in jax.tree.leaves(pshapes))
+
+    if shape.kind == "train":
+        specs = batch_specs(cfg, shape)
+        opt_cfg = AdamWConfig()
+        step, state_sh = jit_train_step(cfg, opt_cfg, rules, pshapes, specs)
+        state_shapes = {"params": pshapes,
+                        "opt": jax.eval_shape(init_opt_state, pshapes)}
+        lowered = step.lower(state_shapes, specs)
+    elif shape.kind == "prefill":
+        specs = batch_specs(cfg, shape)
+        specs.pop("labels")
+        from .train import BATCH_AXES, make_shardings
+
+        def prefill(params, batch):
+            with sh.use_rules(rules):
+                logits, _ = T.forward(params, cfg, batch["tokens"],
+                                      patches=batch.get("patches"),
+                                      enc_frames=batch.get("enc_frames"),
+                                      last_only=True)
+            return logits
+
+        p_sh = make_shardings(rules, T.param_axes(pshapes),
+                              jax.tree.map(lambda x: x.shape, pshapes))
+        b_sh = make_shardings(rules, {k: BATCH_AXES[k] for k in specs},
+                              {k: v.shape for k, v in specs.items()})
+        lowered = jax.jit(prefill, in_shardings=(p_sh, b_sh)).lower(
+            pshapes, specs)
+    else:  # decode
+        specs = decode_specs(cfg, shape)
+        step, _ = jit_serve_step(cfg, rules, pshapes, specs)
+        lowered = step.lower(pshapes, specs["state"], specs["token"],
+                             specs["pos"])
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost_list = compiled.cost_analysis()
+    cost = cost_list[0] if isinstance(cost_list, (list, tuple)) else cost_list
+    text = compiled.as_text()
+    hlo = R.analyze_hlo(text)
+    terms = R.roofline_terms(cost, hlo, chips)
+    mf = R.model_flops(cfg, shape)
+
+    mem_rec = {}
+    for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                 "output_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes"):
+        v = getattr(mem, attr, None)
+        if v is not None:
+            mem_rec[attr] = int(v)
+
+    global_flops = terms["hlo_flops_per_chip"] * chips
+    rec.update(
+        status="ok",
+        chips=chips,
+        n_params=n_params,
+        lower_s=round(t_lower, 1),
+        compile_s=round(t_compile, 1),
+        memory=mem_rec,
+        bytes_per_device=int(sum(mem_rec.get(k, 0) for k in
+                                 ("temp_size_in_bytes",
+                                  "argument_size_in_bytes"))),
+        collectives=hlo.coll_by_kind,
+        n_collectives=hlo.n_collectives,
+        model_flops=mf,
+        useful_ratio=(mf / global_flops) if global_flops else None,
+        **terms,
+    )
+    rec["dominant"] = R.dominant_term(terms)
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--ledger", default="results/dryrun.jsonl")
+    ap.add_argument("--force", action="store_true",
+                    help="recompute cells already in the ledger")
+    args = ap.parse_args(argv)
+
+    from ..configs import ARCH_IDS, SHAPES
+
+    archs = ARCH_IDS if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    os.makedirs(os.path.dirname(args.ledger) or ".", exist_ok=True)
+    done = set()
+    if os.path.exists(args.ledger) and not args.force:
+        with open(args.ledger) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    done.add((r["arch"], r["shape"], r["mesh"], r.get("rules", "baseline")))
+                except json.JSONDecodeError:
+                    pass
+
+    n_ok = n_skip = n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                mesh_name = "2x16x16" if mp else "16x16"
+                key = (arch, shape, mesh_name, args.variant)
+                if key in done:
+                    continue
+                print(f"=== {arch} × {shape} × {mesh_name} ===", flush=True)
+                try:
+                    rec = run_cell(arch, shape, mp, variant=args.variant)
+                except Exception as e:
+                    rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                           "rules": args.variant, "status": "error",
+                           "error": f"{type(e).__name__}: {e}",
+                           "trace": traceback.format_exc()[-2000:]}
+                with open(args.ledger, "a") as f:
+                    f.write(json.dumps(rec) + "\n")
+                st = rec["status"]
+                n_ok += st == "ok"
+                n_skip += st == "skipped"
+                n_fail += st == "error"
+                if st == "ok":
+                    print(f"  compile {rec['compile_s']}s | "
+                          f"{rec['bytes_per_device']/2**30:.2f} GiB/dev | "
+                          f"t_comp {rec['t_compute_s']*1e3:.2f} ms "
+                          f"t_mem {rec['t_memory_s']*1e3:.2f} ms "
+                          f"t_coll {rec['t_collective_s']*1e3:.2f} ms "
+                          f"→ {rec['dominant']} | useful "
+                          f"{(rec['useful_ratio'] or 0)*100:.0f}%", flush=True)
+                else:
+                    print(f"  {st}: {rec.get('reason', rec.get('error'))}",
+                          flush=True)
+    print(f"done: {n_ok} ok, {n_skip} skipped, {n_fail} failed")
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

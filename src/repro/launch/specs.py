@@ -1,0 +1,61 @@
+"""ShapeDtypeStruct input stands-ins for every (arch × shape) cell.
+
+No device allocation — the same pattern as the dry-run requires: weak-type
+correct, shardable.  Modality frontends are stubs per the assignment:
+whisper gets precomputed frame embeddings, qwen2-vl precomputed patch
+embeddings."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..models import transformer as T
+
+SDS = jax.ShapeDtypeStruct
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Inputs for train/prefill: the full-sequence forward."""
+    B, S = shape.global_batch, shape.seq_len
+    act = jnp.dtype(cfg.dtype)
+    specs = {}
+    if cfg.vis_patches:
+        P = cfg.vis_patches
+        specs["tokens"] = SDS((B, S - P), jnp.int32)
+        specs["patches"] = SDS((B, P, cfg.d_model), act)
+        specs["labels"] = SDS((B, S), jnp.int32)
+    elif cfg.enc_dec:
+        specs["tokens"] = SDS((B, S), jnp.int32)
+        specs["enc_frames"] = SDS((B, cfg.enc_frames, cfg.d_model), act)
+        specs["labels"] = SDS((B, S), jnp.int32)
+    else:
+        specs["tokens"] = SDS((B, S), jnp.int32)
+        specs["labels"] = SDS((B, S), jnp.int32)
+    return specs
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Inputs for one serve step: (state, token, pos).  The cache stand-in
+    comes from eval_shape over init_decode_state — ring-capped for local
+    layers, O(1) for recurrent ones."""
+    B, S = shape.global_batch, shape.seq_len
+    act = jnp.dtype(cfg.dtype)
+    pshapes = T.param_shapes(cfg)
+    ef = (SDS((B, cfg.enc_frames, cfg.d_model), act) if cfg.enc_dec else None)
+    state = jax.eval_shape(
+        lambda p, e: T.init_decode_state(p, cfg, B, S, enc_frames=e),
+        pshapes, ef)
+    return {
+        "state": state,
+        "token": SDS((B, 1), jnp.int32),
+        "pos": SDS((), jnp.int32),
+    }
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    if shape.kind == "decode":
+        return decode_specs(cfg, shape)
+    return batch_specs(cfg, shape)

@@ -1,0 +1,208 @@
+"""Training step + fault-tolerant CLI driver.
+
+``make_train_step`` builds the jitted (params, opt, batch) → (params, opt,
+metrics) function with logical-rule sharding; the CLI trains a reduced config
+on CPU with checkpoint/restart through the FT driver:
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b \
+        --steps 200 --smoke --batch 8 --seq 256
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import get_config, smoke_variant
+from ..configs.base import ModelConfig
+from ..models import transformer as T
+from ..optim.adamw import AdamWConfig, adamw_update, init_opt_state
+from . import shardings as sh
+
+BATCH_AXES = {
+    "tokens": ("batch", None), "labels": ("batch", None),
+    "patches": ("batch", None, None), "enc_frames": ("batch", None, None),
+}
+
+
+def _ce_terms(embed_params, cfg, x, labels):
+    """(−Σ log p, Σ mask) for one slice — logits live only inside, kept in
+    the padded (vocab-shardable) layout."""
+    from ..models.layers import unembed
+    logits = unembed(embed_params, x, cfg, sliced=False)
+    mask = (labels >= 0).astype(jnp.float32)
+    safe = jnp.maximum(labels, 0)
+    lse = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(lse, safe[..., None], axis=-1)[..., 0]
+    return -(ll * mask).sum(), mask.sum()
+
+
+def chunked_ce(embed_params, cfg: ModelConfig, x, labels, num_chunks: int):
+    """Cross-entropy scanned over batch chunks with per-chunk remat: the
+    (B,S,V) f32 logits tensor is never materialized — peak extra memory is
+    one (B/num_chunks, S, V) block."""
+    B = x.shape[0]
+    if num_chunks <= 1 or B % num_chunks:
+        return _ce_terms(embed_params, cfg, x, labels)
+    c = B // num_chunks
+    xs = x.reshape(num_chunks, c, *x.shape[1:])
+    ls = labels.reshape(num_chunks, c, *labels.shape[1:])
+
+    body = jax.checkpoint(
+        lambda xc, lc: _ce_terms(embed_params, cfg, xc, lc))
+
+    def scan_fn(acc, inp):
+        xc, lc = inp
+        nll, cnt = body(xc, lc)
+        return (acc[0] + nll, acc[1] + cnt), None
+
+    (nll, cnt), _ = jax.lax.scan(
+        scan_fn, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (xs, ls))
+    return nll, cnt
+
+
+def loss_fn(params, cfg: ModelConfig, batch: dict, num_ce_chunks: int = 1):
+    hidden, aux = T.forward(params, cfg, batch["tokens"],
+                            patches=batch.get("patches"),
+                            enc_frames=batch.get("enc_frames"),
+                            return_hidden=True)
+    labels = batch["labels"]
+    nll, cnt = chunked_ce(params["embed"], cfg, hidden, labels, num_ce_chunks)
+    loss = nll / jnp.maximum(cnt, 1.0)
+    total = loss + 0.01 * aux
+    return total, {"loss": loss, "moe_aux": aux, "tokens": cnt}
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    rules: Optional[sh.Rules] = None,
+                    num_ce_chunks: int = 1):
+    def step(state, batch):
+        with sh.use_rules(rules):
+            grad_fn = jax.value_and_grad(
+                lambda p: loss_fn(p, cfg, batch, num_ce_chunks), has_aux=True)
+            (total, metrics), grads = grad_fn(state["params"])
+            params, opt, opt_metrics = adamw_update(
+                opt_cfg, state["params"], grads, state["opt"])
+        metrics = dict(metrics, **opt_metrics, total_loss=total)
+        return {"params": params, "opt": opt}, metrics
+
+    return step
+
+
+def state_axes(params_shapes) -> dict:
+    paxes = T.param_axes(params_shapes)
+    return {
+        "params": paxes,
+        "opt": {"m": paxes, "v": paxes,
+                "step": (None,) if False else ()},
+    }
+
+
+def make_shardings(rules: sh.Rules, axes_tree, shapes_tree):
+    def one(ax, shp):
+        if not isinstance(shp, (tuple, list)):
+            shp = shp.shape
+        return NamedSharding(rules.mesh, rules.spec(ax, shp))
+    return jax.tree.map(
+        one, axes_tree, shapes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(i, (str, type(None))) for i in x))
+
+
+def jit_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig, rules: sh.Rules,
+                   params_shapes, batch_specs: dict):
+    """Fully-sharded jitted train step for dry-run / pods."""
+    saxes = state_axes(params_shapes)
+    state_shapes = {"params": params_shapes,
+                    "opt": jax.eval_shape(init_opt_state, params_shapes)}
+    saxes["opt"]["step"] = ()
+    state_sh = make_shardings(rules, saxes, jax.tree.map(
+        lambda x: x.shape, state_shapes))
+    batch_axes = {k: BATCH_AXES[k] for k in batch_specs}
+    batch_sh = make_shardings(rules, batch_axes,
+                              {k: v.shape for k, v in batch_specs.items()})
+    # CE chunking: one batch row per data shard at a time
+    B = batch_specs["labels"].shape[0]
+    dp = 1
+    for ax in ("pod", "data"):
+        dp *= rules.mesh.shape.get(ax, 1)
+    nc = (B // dp) if B % dp == 0 and B // dp > 1 else 1
+    step = make_train_step(cfg, opt_cfg, rules, num_ce_chunks=nc)
+    return jax.jit(step, in_shardings=(state_sh, batch_sh),
+                   out_shardings=(state_sh, None)), state_sh
+
+
+# ---------------------------------------------------------------------------
+# CLI: end-to-end CPU training with fault tolerance
+# ---------------------------------------------------------------------------
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-trainable)")
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--fail-at", type=int, default=None,
+                    help="inject a failure (FT demo)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke_variant(cfg)
+    opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=20, total_steps=args.steps)
+
+    from ..data.tokens import synthetic_batch
+    from ..ft.driver import FTConfig, TrainLoop
+
+    key = jax.random.PRNGKey(args.seed)
+    params = T.init_params(cfg, key)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M "
+          f"steps={args.steps} batch={args.batch} seq={args.seq}")
+    state = {"params": params, "opt": init_opt_state(params)}
+    step = jax.jit(make_train_step(cfg, opt_cfg))
+
+    def make_batch(s):
+        b = synthetic_batch(args.seed, s, args.batch, args.seq + 1, cfg.vocab)
+        if cfg.vis_patches:
+            P_ = cfg.vis_patches
+            b = {"tokens": b["tokens"],
+                 "patches": jnp.zeros((args.batch, P_, cfg.d_model),
+                                      jnp.dtype(cfg.dtype)),
+                 "labels": jnp.concatenate(
+                     [-jnp.ones((args.batch, P_), jnp.int32), b["labels"]], 1)}
+        elif cfg.enc_dec:
+            b = dict(b, enc_frames=jnp.zeros(
+                (args.batch, cfg.enc_frames, cfg.d_model), jnp.dtype(cfg.dtype)))
+        return b
+
+    loop = TrainLoop(FTConfig(ckpt_dir=args.ckpt_dir,
+                              ckpt_every=args.ckpt_every),
+                     step, make_batch)
+    start = 0
+    if args.resume:
+        latest = loop.mgr.latest_step()
+        if latest is not None:
+            state = loop.mgr.restore(latest, state)
+            start = latest
+            print(f"resumed from step {latest}")
+    state, last = loop.run(state, args.steps, start_step=start,
+                           fail_at=args.fail_at)
+    print(f"finished at step {last}")
+    return state
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,263 @@
+"""Attention: GQA with optional qk-norm / QKV bias / RoPE / M-RoPE, full,
+local (sliding-window), bidirectional and cross variants, and a ring-buffer
+KV cache whose capacity is ``min(seq, window)`` for local layers — the
+sub-quadratic path that makes ``long_500k`` decodable for hybrid archs.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..launch.shardings import logical
+from .layers import adtype, apply_rope, dense_init, init_rmsnorm, pdtype, rmsnorm
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg: ModelConfig, cross: bool = False) -> dict:
+    d, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    if cross:
+        K = cfg.n_heads  # whisper cross-attn is MHA
+    dt = pdtype(cfg)
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": dense_init(ks[0], (d, H * hd), dt),
+        "wk": dense_init(ks[1], (d, K * hd), dt),
+        "wv": dense_init(ks[2], (d, K * hd), dt),
+        "wo": dense_init(ks[3], (H * hd, d), dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dt)
+        p["bk"] = jnp.zeros((K * hd,), dt)
+        p["bv"] = jnp.zeros((K * hd,), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = init_rmsnorm(hd, dt)
+        p["k_norm"] = init_rmsnorm(hd, dt)
+    return p
+
+
+def _project_qkv(p, x, cfg: ModelConfig, cross: bool):
+    B, S, _ = x.shape
+    H, hd = cfg.n_heads, cfg.hd
+    K = H if cross else cfg.n_kv_heads
+    dt = x.dtype
+    q = x @ p["wq"].astype(dt)
+    if "bq" in p:
+        q = q + p["bq"].astype(dt)
+    q = q.reshape(B, S, H, hd)
+    return q, K
+
+
+def _project_kv(p, src, cfg: ModelConfig, cross: bool):
+    B, T, _ = src.shape
+    hd = cfg.hd
+    K = cfg.n_heads if cross else cfg.n_kv_heads
+    dt = src.dtype
+    k = src @ p["wk"].astype(dt)
+    v = src @ p["wv"].astype(dt)
+    if "bk" in p:
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    return k.reshape(B, T, K, hd), v.reshape(B, T, K, hd)
+
+
+def _expand_kv(kv, H: int):
+    """Repeat KV heads to the full query-head count (MaxText-style GQA under
+    tensor parallelism: K<mesh_model would cap score sharding at K-way;
+    expanded KV lets scores/probs shard H-way — the dominant activation)."""
+    B, T, K, hd = kv.shape
+    if K == H:
+        return kv
+    kv = jnp.broadcast_to(kv[:, :, :, None, :], (B, T, K, H // K, hd))
+    return kv.reshape(B, T, H, hd)
+
+
+def _gqa_scores(q, k, cfg: ModelConfig):
+    """q: (B,S,H,hd), k: (B,T,K,hd) → scores (B,H,S,T)."""
+    B, S, H, hd = q.shape
+    ke = _expand_kv(k, H)
+    s = jnp.einsum("bshd,bthd->bhst", q, ke) / jnp.sqrt(hd).astype(q.dtype)
+    return logical(s, "batch", "heads", None, None)
+
+
+def _gqa_out(probs, v, wo, B, S, cfg: ModelConfig):
+    ve = _expand_kv(v, cfg.n_heads)
+    o = jnp.einsum("bhst,bthd->bshd", probs, ve)
+    o = o.reshape(B, S, cfg.n_heads * cfg.hd)
+    return o @ wo.astype(o.dtype)
+
+
+def attention(p: dict, x: jax.Array, cfg: ModelConfig, *,
+              positions: jax.Array, mode: str = "causal",
+              window: Optional[int] = None,
+              enc_out: Optional[jax.Array] = None,
+              chunk: int = 512) -> jax.Array:
+    """Training/prefill attention.  ``mode``: causal | local | bidir | cross.
+
+    Long sequences use query-chunked attention with per-chunk remat (the
+    flash-attention memory pattern in pure jnp): the (S,T) score matrix is
+    never materialized — per chip the live score block is (B,H,chunk,T).
+    """
+    B, S, _ = x.shape
+    cross = mode == "cross"
+    q, K = _project_qkv(p, x, cfg, cross)
+    src = enc_out if cross else x
+    k, v = _project_kv(p, src, cfg, cross)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    if not cross:
+        q = apply_rope(q, positions, cfg.rope_theta, cfg.mrope)
+        k = apply_rope(k, positions, cfg.rope_theta, cfg.mrope)
+    q = logical(q, "batch", "seq", "heads", "head_dim")
+    k = logical(k, "batch", "seq", "kv_heads", "head_dim")
+    v = logical(v, "batch", "seq", "kv_heads", "head_dim")
+
+    T = k.shape[1]
+    if S > 2 * chunk and S % chunk == 0 and mode in ("causal", "local", "bidir"):
+        o = _attention_chunked(q, k, v, cfg, mode, window or cfg.window, chunk)
+    else:
+        scores = _gqa_scores(q, k, cfg).astype(jnp.float32)
+        if mode in ("causal", "local"):
+            i = jnp.arange(S)[:, None]
+            j = jnp.arange(T)[None, :]
+            mask = j <= i
+            if mode == "local":
+                w = window or cfg.window
+                mask &= j > i - w
+            scores = jnp.where(mask[None, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        o = jnp.einsum("bhst,bthd->bshd", probs, _expand_kv(v, cfg.n_heads))
+    y = o.reshape(B, S, cfg.n_heads * cfg.hd) @ p["wo"].astype(x.dtype)
+    return logical(y, "batch", "seq", "embed")
+
+
+def _attention_chunked(q, k, v, cfg: ModelConfig, mode: str, window: int,
+                       chunk: int) -> jax.Array:
+    """Query-chunked attention, rematerialized per chunk.
+
+    Local mode additionally restricts each query chunk's KV view to the
+    trailing ``window``-aligned band, so compute is O(S·window) not O(S²) —
+    this is what keeps recurrentgemma's attention layers sub-quadratic.
+    """
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    ke = _expand_kv(k, H)
+    ve = _expand_kv(v, H)
+    nq = S // chunk
+    qs = jnp.moveaxis(q.reshape(B, nq, chunk, H, hd), 1, 0)
+    scale = 1.0 / jnp.sqrt(hd).astype(q.dtype)
+
+    local_band = None
+    if mode == "local":
+        # KV band per chunk: [band_start, band_start + band_len)
+        band_len = min(T, ((window + chunk - 1) // chunk + 1) * chunk)
+        local_band = band_len
+
+    def chunk_fn(idx, qc):
+        q0 = idx * chunk
+        if local_band is not None:
+            start = jnp.clip(q0 + chunk - local_band, 0, T - local_band)
+            kb = jax.lax.dynamic_slice_in_dim(ke, start, local_band, axis=1)
+            vb = jax.lax.dynamic_slice_in_dim(ve, start, local_band, axis=1)
+            jb = start + jnp.arange(local_band)
+        else:
+            kb, vb = ke, ve
+            jb = jnp.arange(T)
+        s = jnp.einsum("bshd,bthd->bhst", qc, kb) * scale
+        s = s.astype(jnp.float32)
+        ib = q0 + jnp.arange(chunk)
+        if mode in ("causal", "local"):
+            m = jb[None, :] <= ib[:, None]
+            if mode == "local":
+                m &= jb[None, :] > ib[:, None] - window
+            s = jnp.where(m[None, None], s, NEG_INF)
+        pr = jax.nn.softmax(s, axis=-1).astype(qc.dtype)
+        return jnp.einsum("bhst,bthd->bshd", pr, vb)
+
+    body = jax.checkpoint(chunk_fn)
+
+    def scan_fn(_, inp):
+        idx, qc = inp
+        return None, body(idx, qc)
+
+    _, os = jax.lax.scan(scan_fn, None, (jnp.arange(nq), qs))
+    return jnp.moveaxis(os, 0, 1).reshape(B, S, H, hd)
+
+
+# ---------------------------------------------------------------------------
+# KV cache (decode)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, capacity: int, mode: str,
+               dtype) -> dict:
+    """Ring-buffer cache.  ``capacity`` = seq_len for full attention,
+    min(seq_len, window) for local — local layers stay O(window) even at
+    524k context."""
+    K, hd = cfg.n_kv_heads, cfg.hd
+    return {
+        "k": jnp.zeros((batch, capacity, K, hd), dtype),
+        "v": jnp.zeros((batch, capacity, K, hd), dtype),
+        "pos": jnp.zeros((capacity,), jnp.int32) - 1,  # absolute pos per slot
+    }
+
+
+def decode_attention(p: dict, x: jax.Array, cache: dict, cfg: ModelConfig, *,
+                     pos: jax.Array, mode: str = "causal",
+                     window: Optional[int] = None,
+                     cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None
+                     ) -> Tuple[jax.Array, dict]:
+    """One-token decode.  ``x``: (B, 1, d); ``pos``: scalar absolute position.
+
+    Keys are stored post-RoPE at absolute positions; the ring slot is
+    ``pos % capacity`` and validity comes from the per-slot absolute-position
+    table, which uniformly handles full and sliding-window masks.
+    """
+    B = x.shape[0]
+    if mode == "cross":
+        q, _ = _project_qkv(p, x, cfg, cross=True)
+        if cfg.qk_norm:
+            q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k, v = cross_kv
+        scores = _gqa_scores(q, k, cfg).astype(jnp.float32)
+        probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        y = _gqa_out(probs, v, p["wo"], B, 1, cfg)
+        return y, cache
+
+    q, K = _project_qkv(p, x, cfg, cross=False)
+    k_new, v_new = _project_kv(p, x, cfg, cross=False)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k_new = rmsnorm(p["k_norm"], k_new, cfg.norm_eps)
+    pos_b = jnp.full((B, 1), pos, jnp.int32)
+    q = apply_rope(q, pos_b, cfg.rope_theta, cfg.mrope)
+    k_new = apply_rope(k_new, pos_b, cfg.rope_theta, cfg.mrope)
+
+    cap = cache["k"].shape[1]
+    slot = pos % cap
+    ck = jax.lax.dynamic_update_slice(cache["k"], k_new, (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v_new, (0, slot, 0, 0))
+    cpos = jax.lax.dynamic_update_slice(cache["pos"],
+                                        jnp.reshape(pos, (1,)).astype(jnp.int32),
+                                        (slot,))
+    ck = logical(ck, "batch", "seq_kv", "kv_heads_cache", None)
+    cv = logical(cv, "batch", "seq_kv", "kv_heads_cache", None)
+
+    scores = _gqa_scores(q, ck, cfg).astype(jnp.float32)   # (B,H,1,cap)
+    valid = (cpos >= 0) & (cpos <= pos)
+    if mode == "local":
+        w = window or cfg.window
+        valid &= cpos > pos - w
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    y = _gqa_out(probs, cv, p["wo"], B, 1, cfg)
+    return y, {"k": ck, "v": cv, "pos": cpos}
+
+
+def cache_capacity(cfg: ModelConfig, mode: str, seq_len: int) -> int:
+    if mode == "local":
+        return min(seq_len, cfg.window)
+    return seq_len

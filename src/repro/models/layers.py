@@ -1,0 +1,163 @@
+"""Shared layers: norms, MLPs, rotary embeddings, token embedding.
+
+Pure-JAX parameter pytrees (nested dicts of arrays); every layer is a pair
+``init_*(key, cfg) -> params`` / ``apply(params, x, ...) -> y``.  Activation
+sharding hints go through :func:`repro.launch.shardings.logical`.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..launch.shardings import logical
+
+
+def adtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def pdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[0] if len(shape) > 1 else shape[0]
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: dict, x: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# MLP (gated or plain)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    dt = pdtype(cfg)
+    k1, k2, k3 = jax.random.split(key, 3)
+    gated = cfg.act in ("silu", "swiglu", "geglu")
+    p = {"up": dense_init(k1, (d, f), dt), "down": dense_init(k2, (f, d), dt)}
+    if gated:
+        p["gate"] = dense_init(k3, (d, f), dt)
+    return p
+
+
+def _act(name: str, x):
+    if name in ("silu", "swiglu"):
+        return jax.nn.silu(x)
+    if name in ("gelu", "geglu"):
+        return jax.nn.gelu(x)
+    return jax.nn.relu(x)
+
+
+def mlp(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    dt = x.dtype
+    up = x @ p["up"].astype(dt)
+    up = logical(up, "batch", "seq", "ff")
+    if "gate" in p:
+        g = _act(cfg.act, x @ p["gate"].astype(dt))
+        h = g * up
+    else:
+        h = _act(cfg.act, up)
+    out = h @ p["down"].astype(dt)
+    return logical(out, "batch", "seq", "embed")
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings (RoPE + M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(hd: int, theta: float, dtype=jnp.float32):
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=dtype) / hd))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float,
+               mrope: bool = False) -> jax.Array:
+    """``x``: (B, S, H, hd); ``positions``: (B, S) or (B, S, 3) for M-RoPE.
+
+    M-RoPE (qwen2-vl) splits the rotary dims into 3 sections driven by
+    (temporal, h, w) position ids; the frontend stub supplies all three equal
+    to the text position, which degenerates to standard RoPE exactly as for
+    text-only inputs in the paper.
+    """
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    if mrope:
+        if positions.ndim == 2:
+            positions = jnp.stack([positions] * 3, axis=-1)
+        # sections: 1/2 temporal, 1/4 h, 1/4 w of the rotary dims
+        n = hd // 2
+        sec = jnp.concatenate([
+            jnp.zeros((n - n // 2,), jnp.int32),
+            jnp.ones((n // 4,), jnp.int32),
+            jnp.full((n - (n - n // 2) - n // 4,), 2, jnp.int32)])
+        pos = jnp.take_along_axis(
+            positions.astype(jnp.float32),
+            jnp.broadcast_to(sec[None, None, :], positions.shape[:2] + (n,)),
+            axis=-1)                                     # (B, S, hd/2)
+        ang = pos * freqs[None, None, :]
+    else:
+        ang = positions.astype(jnp.float32)[..., None] * freqs[None, None, :]
+    sin = jnp.sin(ang)[..., None, :].astype(x.dtype)     # (B,S,1,hd/2)
+    cos = jnp.cos(ang)[..., None, :].astype(x.dtype)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# embeddings
+# ---------------------------------------------------------------------------
+
+def init_embed(key, cfg: ModelConfig) -> dict:
+    dt = pdtype(cfg)
+    k1, k2 = jax.random.split(key)
+    p = {"tok": dense_init(k1, (cfg.vocab, cfg.d_model), dt, scale=0.02)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = dense_init(k2, (cfg.d_model, cfg.vocab), dt)
+    return p
+
+
+def embed(p: dict, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    x = jnp.take(p["tok"], tokens, axis=0).astype(adtype(cfg))
+    return logical(x, "batch", "seq", "embed")
+
+
+def unembed(p: dict, x: jax.Array, cfg: ModelConfig, *,
+            sliced: bool = True) -> jax.Array:
+    """Project to vocabulary logits.
+
+    The vocab dim is padded to a multiple of 256 so it shards on any mesh
+    axis (granite/whisper/mamba2 vocabs are odd-sized and would otherwise
+    fall back to full logits replication — 24 GiB/device at train_4k).
+    Padded columns are masked to −∞; ``sliced=False`` keeps the padded
+    (shardable) logits for the loss path."""
+    w = p["unembed"] if "unembed" in p else p["tok"].T
+    V = cfg.vocab
+    Vp = -(-V // 256) * 256
+    if Vp != V:
+        w = jnp.pad(w, ((0, 0), (0, Vp - V)))
+    logits = x.astype(jnp.float32) @ w.astype(jnp.float32)
+    if Vp != V:
+        logits = jnp.where(jnp.arange(Vp) < V, logits, -1e30)
+    logits = logical(logits, "batch", "seq", "vocab")
+    if sliced and Vp != V:
+        logits = logits[..., :V]
+    return logits

@@ -1,0 +1,102 @@
+"""Mixture-of-Experts layer (granite-moe, dbrx).
+
+Sort-based capacity dispatch rather than GShard one-hot einsums: the one-hot
+dispatch tensor inflates HLO FLOPs ~E× (it is dense to XLA), wrecking the
+MODEL_FLOPS/HLO_FLOPS roofline ratio.  Here tokens are sorted by expert id
+*within each sequence group*, scattered into an (E, C, d) buffer (the
+sharding boundary where GSPMD inserts the expert-parallel all_to_all), run
+through batched expert MLPs at true active-parameter FLOPs, and scattered
+back with gate weighting.  Capacity overflow drops tokens (standard; the
+residual stream carries them — counted in the aux metrics).
+
+The BELL-kernel connection (DESIGN.md §Arch-applicability): the (E, C, d)
+expert buffer is exactly a block-ELL layout — dense per-expert tiles plus an
+integer block-to-expert table — so the same TPU tiling idea the paper's SpMV
+uses serves expert dispatch.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..launch.shardings import logical
+from .layers import dense_init, pdtype
+
+
+def moe_capacity(cfg: ModelConfig, seq: int) -> int:
+    c = int(seq * cfg.top_k / cfg.n_experts * cfg.capacity_factor)
+    return max(8, -(-c // 8) * 8)
+
+
+def init_moe(key, cfg: ModelConfig) -> dict:
+    d, E, f = cfg.d_model, cfg.n_experts, cfg.d_ff_expert
+    dt = pdtype(cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        "router": dense_init(ks[0], (d, E), dt, scale=0.02),
+        "w_gate": dense_init(ks[1], (E, d, f), dt),
+        "w_up": dense_init(ks[2], (E, d, f), dt),
+        "w_down": dense_init(ks[3], (E, f, d), dt),
+    }
+
+
+def moe_mlp(p: dict, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) → (y, aux_loss).  Routing groups = sequences (rows of the
+    batch), so sort/scatter stay device-local under batch sharding and the
+    only cross-device movement is the (B, E, C, d) resharding."""
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    C = moe_capacity(cfg, S)
+    dt = x.dtype
+
+    logits = (x @ p["router"].astype(dt)).astype(jnp.float32)   # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)              # (B,S,k)
+    gate_vals = (gate_vals / jnp.sum(gate_vals, -1, keepdims=True)).astype(dt)
+
+    # ---- sort-based routing (all GATHERS — scatters replicate under GSPMD) --
+    eidx = expert_idx.reshape(B, S * k)
+    order = jnp.argsort(eidx, axis=1, stable=True)               # sorted→copy
+    se = jnp.take_along_axis(eidx, order, 1)                     # sorted experts
+    st = order // k                                              # token of copy
+    counts = jax.vmap(lambda e: jnp.bincount(e, length=E))(eidx)  # (B,E)
+    seg_start = jnp.cumsum(counts, axis=1) - counts               # (B,E)
+    rank = jnp.arange(S * k)[None, :] - jnp.take_along_axis(seg_start, se, 1)
+
+    # load-balance aux (Switch-style) from the routing counts — no one-hots
+    frac_routed = counts.astype(jnp.float32) / (S * k)
+    mean_prob = jnp.mean(probs, axis=1)
+    aux = E * jnp.mean(jnp.sum(frac_routed * mean_prob, -1))
+
+    # ---- dispatch: slot (e,c) ← token st[seg_start[e]+c] (pure gathers) ----
+    c_idx = jnp.arange(C)
+    pos = seg_start[:, :, None] + c_idx[None, None, :]            # (B,E,C)
+    valid = c_idx[None, None, :] < counts[:, :, None]
+    pos_c = jnp.clip(pos, 0, S * k - 1).reshape(B, E * C)
+    tok = jnp.take_along_axis(st, pos_c, 1)                       # (B,E*C)
+    xin = jnp.take_along_axis(x, tok[..., None], axis=1)          # (B,E*C,d)
+    buf = jnp.where(valid.reshape(B, E * C)[..., None], xin, 0.0)
+    buf = buf.reshape(B, E, C, d)
+    # the expert-parallel boundary: batch→data, experts→model (all_to_all)
+    buf = logical(buf, "batch", "experts", "expert_cap", "embed")
+
+    # ---- batched expert MLPs (true active FLOPs) ----
+    g = jnp.einsum("becd,edf->becf", buf, p["w_gate"].astype(dt))
+    u = jnp.einsum("becd,edf->becf", buf, p["w_up"].astype(dt))
+    h = jax.nn.silu(g) * u
+    out = jnp.einsum("becf,efd->becd", h, p["w_down"].astype(dt))
+    out = logical(out, "batch", "experts", "expert_cap", "embed")
+
+    # ---- combine: copy j of token t reads its slot (pure gathers) ----
+    inv = jnp.argsort(order, axis=1)                              # copy→sorted
+    slot_flat = jnp.where(rank < C, se * C + rank, E * C)         # per sorted
+    slot_of_copy = jnp.take_along_axis(slot_flat, inv, 1)         # (B,S*k)
+    flat = jnp.concatenate(
+        [out.reshape(B, E * C, d), jnp.zeros((B, 1, d), dt)], axis=1)
+    per_copy = jnp.take_along_axis(flat, slot_of_copy[..., None], axis=1)
+    per_copy = per_copy.reshape(B, S, k, d) * gate_vals[..., None]
+    y = jnp.sum(per_copy, axis=2)
+    return logical(y, "batch", "seq", "embed"), aux

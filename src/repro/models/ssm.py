@@ -1,0 +1,318 @@
+"""Sequence mixers without attention: Mamba2 SSD and RG-LRU (Griffin).
+
+Both are implemented in their *chunked / scan* forms so training parallelizes
+over sequence and decode is O(1)-state — the property that keeps the
+``long_500k`` cell sub-quadratic (DESIGN.md §Arch-applicability).  The
+inter-chunk state recurrence is the same neighbour-passing pattern as the
+paper's halo exchange; under sequence sharding the boundary state crosses
+shards with the halo primitive (perf iteration, see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..launch.shardings import logical
+from .layers import dense_init, init_rmsnorm, pdtype, rmsnorm
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv1d (width w, shared by both mixers)
+# ---------------------------------------------------------------------------
+
+def init_conv1d(key, channels: int, width: int, dtype) -> dict:
+    return {"w": dense_init(key, (width, channels), dtype, scale=0.5)}
+
+
+def conv1d(p: dict, x: jax.Array) -> jax.Array:
+    """x: (B, S, C) causal depthwise convolution via static shifts."""
+    w = p["w"].astype(x.dtype)
+    width = w.shape[0]
+    y = x * w[-1]
+    for i in range(1, width):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, :-i]
+        y = y + shifted * w[-1 - i]
+    return y
+
+
+def conv1d_step(p: dict, x_t: jax.Array, cache: jax.Array
+                ) -> Tuple[jax.Array, jax.Array]:
+    """x_t: (B, C); cache: (B, width-1, C) past inputs."""
+    w = p["w"].astype(x_t.dtype)
+    hist = jnp.concatenate([cache, x_t[:, None]], axis=1)   # (B, width, C)
+    y = jnp.einsum("bwc,wc->bc", hist, w)
+    return y, hist[:, 1:]
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 / SSD (state-space duality, chunked)
+# ---------------------------------------------------------------------------
+
+def ssd_dims(cfg: ModelConfig):
+    d_in = 2 * cfg.d_model
+    nheads = d_in // cfg.ssm_head_dim
+    return d_in, nheads, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def init_ssd(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    d_in, H, Pd, N = ssd_dims(cfg)
+    dt = pdtype(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        # in_proj → [z | x | B | C | dt]
+        "in_proj": dense_init(ks[0], (d, 2 * d_in + 2 * N + H), dt),
+        "conv": init_conv1d(ks[1], d_in + 2 * N, cfg.conv_width, dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(dt),
+        "D": jnp.ones((H,), dt),
+        "dt_bias": jnp.zeros((H,), dt),
+        "norm": init_rmsnorm(d_in, dt),
+        "out_proj": dense_init(ks[2], (d_in, d), dt),
+    }
+
+
+def _ssd_scan(Xd, a, Bm, Cm, chunk: int, h0=None):
+    """Core SSD: Xd (B,S,H,P) dt-scaled inputs, a (B,S,H) log-decay (≤0),
+    Bm/Cm (B,S,N).  Returns (Y (B,S,H,P), final state (B,H,N,P))."""
+    Bsz, S, H, Pd = Xd.shape
+    N = Bm.shape[-1]
+    L = min(chunk, S)
+    S_orig = S
+    if S % L:
+        pad = L - S % L          # zero-pad: a=0 → decay 1, Xd=0 → no input
+        Xd = jnp.pad(Xd, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    nc = S // L
+    f32 = jnp.float32
+
+    Xc = Xd.reshape(Bsz, nc, L, H, Pd)
+    ac = a.reshape(Bsz, nc, L, H).astype(f32)
+    Bc = Bm.reshape(Bsz, nc, L, N)
+    Cc = Cm.reshape(Bsz, nc, L, N)
+
+    cum = jnp.cumsum(ac, axis=2)                         # (B,nc,L,H)
+    # intra-chunk: att[i,j] = C_i·B_j · exp(cum_i − cum_j), j ≤ i
+    cb = jnp.einsum("bcin,bcjn->bcij", Cc.astype(f32), Bc.astype(f32))
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,i,j,H)
+    tri = (jnp.arange(L)[:, None] >= jnp.arange(L)[None, :])
+    # clamp BEFORE exp: the masked upper triangle has seg > 0 and would
+    # overflow, poisoning gradients through the dead branch (inf·0 → NaN)
+    seg = jnp.where(tri[None, None, :, :, None], seg, -jnp.inf)
+    att = jnp.where(tri[None, None, :, :, None],
+                    jnp.exp(seg) * cb[..., None], 0.0)
+    Y_intra = jnp.einsum("bcijh,bcjhp->bcihp", att.astype(Xd.dtype), Xc)
+
+    # chunk-final local states: S_c = Σ_j exp(cum_L − cum_j) B_j ⊗ Xd_j
+    decay_out = jnp.exp(cum[:, :, -1:, :] - cum)         # (B,nc,L,H)
+    Sloc = jnp.einsum("bcjh,bcjn,bcjhp->bchnp",
+                      decay_out.astype(Xd.dtype), Bc, Xc)
+
+    # inter-chunk recurrence (the neighbour/halo state pass)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])              # (B,nc,H)
+
+    def step(h, inp):
+        dec, s = inp
+        h_new = h * dec[..., None, None].astype(h.dtype) + s
+        return h_new, h
+
+    h_init = (jnp.zeros((Bsz, H, N, Pd), Xd.dtype) if h0 is None else h0)
+    h_fin, h_prevs = jax.lax.scan(
+        step, h_init,
+        (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(Sloc, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                # (B,nc,H,N,P)
+
+    Y_inter = jnp.einsum("bcin,bchi,bchnp->bcihp",
+                         Cc, jnp.exp(cum).astype(Cc.dtype).transpose(0, 1, 3, 2),
+                         h_prevs)
+    Y = (Y_intra + Y_inter).reshape(Bsz, S, H, Pd)
+    return Y[:, :S_orig], h_fin
+
+
+def _ssd_seq_parallel(Xd, a, Bm, Cm, chunk: int, n_sp: int):
+    """Sequence-domain-decomposed SSD: each of ``n_sp`` segments (sharded over
+    the model axis via the ``seq_mixer`` rule) runs SSD locally with zero
+    initial state; boundary states then propagate segment-to-segment — the
+    paper's §3.3 neighbour/halo pattern, with the state tensor (B,H,N,P) as
+    the halo payload — and a per-position correction folds the incoming state
+    into each segment's output."""
+    B, S, H, Pd = Xd.shape
+    N = Bm.shape[-1]
+    Sl = S // n_sp
+    r3 = lambda t: t.reshape(B, n_sp, Sl, *t.shape[2:])
+    Xs, as_, Bs, Cs = r3(Xd), r3(a), r3(Bm), r3(Cm)
+    Xs = logical(Xs, "batch", "seq_mixer", None, "heads", "head_dim")
+
+    Yl, hf = jax.vmap(
+        lambda x_, a_, b_, c_: _ssd_scan(x_, a_, b_, c_, chunk),
+        in_axes=1, out_axes=(1, 1))(Xs, as_, Bs, Cs)
+
+    cum_seg = jnp.cumsum(as_.astype(jnp.float32), axis=2)   # (B,n_sp,Sl,H)
+    seg_decay = jnp.exp(cum_seg[:, :, -1])                   # (B,n_sp,H)
+
+    def step(h, inp):
+        dec, s = inp
+        return dec[..., None, None].astype(h.dtype) * h + s, h
+
+    _, h_ins = jax.lax.scan(
+        step, jnp.zeros_like(hf[:, 0]),
+        (jnp.moveaxis(seg_decay, 1, 0), jnp.moveaxis(hf, 1, 0)))
+    h_ins = jnp.moveaxis(h_ins, 0, 1)                        # state entering j
+
+    Y_extra = jnp.einsum("bjtn,bjth,bjhnp->bjthp",
+                         Cs, jnp.exp(cum_seg).astype(Cs.dtype), h_ins)
+    return (Yl + Y_extra).reshape(B, S, H, Pd)
+
+
+def ssd_forward(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Full-sequence SSD mixer (training / prefill).
+
+    With ``cfg.seq_shards_mixer > 1`` the sequence is domain-decomposed
+    across the model axis (the paper's sparse-tensor-parallel pattern) —
+    see :func:`_ssd_seq_parallel`."""
+    B, S, d = x.shape
+    d_in, H, Pd, N = ssd_dims(cfg)
+    dt_ = x.dtype
+    zxbcdt = x @ p["in_proj"].astype(dt_)
+    z, xs, Bm, Cm, dth = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + N, 2 * d_in + 2 * N], axis=-1)
+    conv_in = jnp.concatenate([xs, Bm, Cm], axis=-1)
+    conv_out = jax.nn.silu(conv1d(p["conv"], conv_in))
+    xs, Bm, Cm = jnp.split(conv_out, [d_in, d_in + N], axis=-1)
+    dth = jax.nn.softplus(dth.astype(jnp.float32)
+                          + p["dt_bias"].astype(jnp.float32))   # (B,S,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                 # (H,)
+    a = dth * A[None, None, :]                                   # log-decay
+    Xh = xs.reshape(B, S, H, Pd)
+    Xd = Xh * dth[..., None].astype(dt_)
+    n_sp = getattr(cfg, "seq_shards_mixer", 1)
+    if n_sp > 1 and S % n_sp == 0 and (S // n_sp) >= 2:
+        Y = _ssd_seq_parallel(Xd, a, Bm, Cm, min(cfg.ssm_chunk, S // n_sp),
+                              n_sp)
+    else:
+        Xd = logical(Xd, "batch", "seq", "heads", "head_dim")
+        Y, _ = _ssd_scan(Xd, a, Bm, Cm, cfg.ssm_chunk)
+    Y = Y + Xh * p["D"].astype(dt_)[None, None, :, None]
+    Y = Y.reshape(B, S, d_in)
+    Y = rmsnorm(p["norm"], Y * jax.nn.silu(z), cfg.norm_eps)
+    return logical(Y @ p["out_proj"].astype(dt_), "batch", "seq", "embed")
+
+
+def init_ssd_state(cfg: ModelConfig, batch: int, dtype) -> dict:
+    d_in, H, Pd, N = ssd_dims(cfg)
+    return {
+        "h": jnp.zeros((batch, H, N, Pd), dtype),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, d_in + 2 * N), dtype),
+    }
+
+
+def ssd_step(p: dict, x: jax.Array, state: dict, cfg: ModelConfig
+             ) -> Tuple[jax.Array, dict]:
+    """One-token decode.  x: (B, 1, d)."""
+    B, _, d = x.shape
+    d_in, H, Pd, N = ssd_dims(cfg)
+    dt_ = x.dtype
+    zxbcdt = (x[:, 0] @ p["in_proj"].astype(dt_))
+    z, xs, Bm, Cm, dth = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + N, 2 * d_in + 2 * N], axis=-1)
+    conv_in = jnp.concatenate([xs, Bm, Cm], axis=-1)
+    conv_out, conv_cache = conv1d_step(p["conv"], conv_in, state["conv"])
+    conv_out = jax.nn.silu(conv_out)
+    xs, Bm, Cm = jnp.split(conv_out, [d_in, d_in + N], axis=-1)
+    dth = jax.nn.softplus(dth.astype(jnp.float32)
+                          + p["dt_bias"].astype(jnp.float32))   # (B,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dec = jnp.exp(dth * A[None, :])                              # (B,H)
+    Xh = xs.reshape(B, H, Pd)
+    h = state["h"] * dec[..., None, None].astype(dt_)
+    h = h + jnp.einsum("bn,bhp,bh->bhnp", Bm, Xh, dth.astype(dt_))
+    y = jnp.einsum("bn,bhnp->bhp", Cm, h) + Xh * p["D"].astype(dt_)[None, :, None]
+    y = y.reshape(B, d_in)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = (y @ p["out_proj"].astype(dt_))[:, None]
+    return out, {"h": h, "conv": conv_cache}
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU recurrent block (Griffin / recurrentgemma)
+# ---------------------------------------------------------------------------
+
+def lru_width(cfg: ModelConfig) -> int:
+    return cfg.lru_width or cfg.d_model
+
+
+def init_rglru(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    w = lru_width(cfg)
+    dt = pdtype(cfg)
+    ks = jax.random.split(key, 6)
+    # Λ init so a = exp(-8·softplus(Λ)) ∈ (0.9, 0.999) at r = 1
+    lam = jnp.log(jnp.expm1(-jnp.log(
+        jnp.linspace(0.9, 0.999, w)) / 8.0)).astype(dt)
+    return {
+        "w_main": dense_init(ks[0], (d, w), dt),
+        "w_gate_br": dense_init(ks[1], (d, w), dt),
+        "conv": init_conv1d(ks[2], w, cfg.conv_width, dt),
+        "w_r": dense_init(ks[3], (w, w), dt),
+        "w_i": dense_init(ks[4], (w, w), dt),
+        "lam": lam,
+        "w_out": dense_init(ks[5], (w, d), dt),
+    }
+
+
+def _rglru_gates(p, u):
+    f32 = jnp.float32
+    r = jax.nn.sigmoid((u @ p["w_r"].astype(u.dtype)).astype(f32))
+    i = jax.nn.sigmoid((u @ p["w_i"].astype(u.dtype)).astype(f32))
+    log_a = -8.0 * jax.nn.softplus(p["lam"].astype(f32)) * r
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, beta * i * u.astype(f32)
+
+
+def rglru_forward(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Griffin recurrent block: gate branch ⊙ (conv → RG-LRU), full sequence
+    via associative scan."""
+    dt_ = x.dtype
+    gate = jax.nn.gelu(x @ p["w_gate_br"].astype(dt_))
+    u = x @ p["w_main"].astype(dt_)
+    u = conv1d(p["conv"], u)
+    u = logical(u, "batch", "seq", "ff")
+    a, b = _rglru_gates(p, u)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h = h.astype(dt_)
+    y = (gate * h) @ p["w_out"].astype(dt_)
+    return logical(y, "batch", "seq", "embed")
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int, dtype) -> dict:
+    w = lru_width(cfg)
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, w), dtype),
+    }
+
+
+def rglru_step(p: dict, x: jax.Array, state: dict, cfg: ModelConfig
+               ) -> Tuple[jax.Array, dict]:
+    """One-token decode.  x: (B, 1, d)."""
+    dt_ = x.dtype
+    x0 = x[:, 0]
+    gate = jax.nn.gelu(x0 @ p["w_gate_br"].astype(dt_))
+    u = x0 @ p["w_main"].astype(dt_)
+    u, conv_cache = conv1d_step(p["conv"], u, state["conv"])
+    a, b = _rglru_gates(p, u)
+    h = a * state["h"] + b
+    y = ((gate * h.astype(dt_)) @ p["w_out"].astype(dt_))[:, None]
+    return y, {"h": h, "conv": conv_cache}

@@ -1,0 +1,397 @@
+"""Architecture assembly: one composable decoder (+optional encoder) covering
+all 10 assigned architectures via the config layer pattern.
+
+* homogeneous layer *periods* are stacked and scanned (one period traced once
+  → compile time independent of depth; remainder layers applied explicitly);
+* ``jax.checkpoint`` on the period body implements the remat policy;
+* decode threads a per-period cache pytree through the same scan;
+* parameter sharding is name-based (``param_axes``) so the launcher can build
+  NamedShardings for any mesh without touching model code.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..launch.shardings import logical
+from . import attention as attn
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .layers import (adtype, embed, init_embed, init_mlp, init_rmsnorm, mlp,
+                     pdtype, rmsnorm, unembed)
+
+# ---------------------------------------------------------------------------
+# per-layer init
+# ---------------------------------------------------------------------------
+
+def _init_layer(key, cfg: ModelConfig, kind: str) -> dict:
+    dt = pdtype(cfg)
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"ln1": init_rmsnorm(cfg.d_model, dt)}
+    if kind in ("attn", "attn_local", "attn_bidir"):
+        p["attn"] = attn.init_attention(ks[0], cfg)
+        if cfg.d_ff:
+            p["ln2"] = init_rmsnorm(cfg.d_model, dt)
+            p["mlp"] = init_mlp(ks[1], cfg)
+    elif kind == "moe":
+        p["attn"] = attn.init_attention(ks[0], cfg)
+        p["ln2"] = init_rmsnorm(cfg.d_model, dt)
+        p["moe"] = moe_mod.init_moe(ks[1], cfg)
+    elif kind == "rec":
+        p["rec"] = ssm_mod.init_rglru(ks[0], cfg)
+        if cfg.d_ff:
+            p["ln2"] = init_rmsnorm(cfg.d_model, dt)
+            p["mlp"] = init_mlp(ks[1], cfg)
+    elif kind == "ssd":
+        p["ssd"] = ssm_mod.init_ssd(ks[0], cfg)
+        if cfg.d_ff:
+            p["ln2"] = init_rmsnorm(cfg.d_model, dt)
+            p["mlp"] = init_mlp(ks[1], cfg)
+    else:
+        raise ValueError(f"unknown layer kind {kind!r}")
+    if cfg.enc_dec and kind != "attn_bidir":
+        p["ln_x"] = init_rmsnorm(cfg.d_model, dt)
+        p["cross"] = attn.init_attention(ks[2], cfg, cross=True)
+    return p
+
+
+def _apply_layer(p: dict, x: jax.Array, cfg: ModelConfig, kind: str, *,
+                 positions, enc_out=None) -> Tuple[jax.Array, jax.Array]:
+    """Returns (x, moe_aux).  The residual stream is constrained to the
+    sequence-sharded layout between blocks (launch/shardings.py seq_res)."""
+    aux = jnp.zeros((), jnp.float32)
+    x = logical(x, "batch", "seq_res", "embed")
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    # H5 (EXPERIMENTS §Perf): pin the bf16 norm output to the sequence-
+    # sharded layout so GSPMD's full-sequence gather happens AFTER the
+    # f32→bf16 convert instead of on the f32 rmsnorm internals.
+    h = logical(h, "batch", "seq_norm", "embed")
+    if kind in ("attn", "attn_local", "attn_bidir"):
+        mode = {"attn": "causal", "attn_local": "local",
+                "attn_bidir": "bidir"}[kind]
+        x = x + attn.attention(p["attn"], h, cfg, positions=positions,
+                               mode=mode)
+    elif kind == "moe":
+        x = x + attn.attention(p["attn"], h, cfg, positions=positions,
+                               mode="causal")
+    elif kind == "rec":
+        x = x + ssm_mod.rglru_forward(p["rec"], h, cfg)
+    elif kind == "ssd":
+        x = x + ssm_mod.ssd_forward(p["ssd"], h, cfg)
+    if cfg.enc_dec and "cross" in p:
+        hx = rmsnorm(p["ln_x"], x, cfg.norm_eps)
+        x = x + attn.attention(p["cross"], hx, cfg, positions=positions,
+                               mode="cross", enc_out=enc_out)
+    if "mlp" in p:
+        h2 = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        h2 = logical(h2, "batch", "seq_norm", "embed")
+        x = x + mlp(p["mlp"], h2, cfg)
+    elif "moe" in p:
+        h2 = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        h2 = logical(h2, "batch", "seq_norm", "embed")
+        y, aux = moe_mod.moe_mlp(p["moe"], h2, cfg)
+        x = x + y
+    x = logical(x, "batch", "seq_res", "embed")
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# period decomposition
+# ---------------------------------------------------------------------------
+
+def _period_split(cfg: ModelConfig) -> Tuple[int, int]:
+    period = len(cfg.layer_pattern)
+    n_full = cfg.n_layers // period
+    n_rem = cfg.n_layers - n_full * period
+    return n_full, n_rem
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    n_full, n_rem = _period_split(cfg)
+    period = cfg.layer_pattern
+    k_embed, k_stack, k_rem, k_enc = jax.random.split(key, 4)
+
+    def one_period(k):
+        ks = jax.random.split(k, len(period))
+        return {f"l{i}": _init_layer(ks[i], cfg, kind)
+                for i, kind in enumerate(period)}
+
+    stack = jax.vmap(one_period)(jax.random.split(k_stack, n_full))
+    rem = {f"l{i}": _init_layer(k, cfg, period[i])
+           for i, k in enumerate(jax.random.split(k_rem, max(n_rem, 1))[:n_rem])}
+    params = {
+        "embed": init_embed(k_embed, cfg),
+        "final_norm": init_rmsnorm(cfg.d_model, pdtype(cfg)),
+        "stack": stack,
+        "rem": rem,
+    }
+    if cfg.enc_dec:
+        def enc_layer(k):
+            return _init_layer(k, cfg, "attn_bidir")
+        params["encoder"] = {
+            "stack": jax.vmap(enc_layer)(
+                jax.random.split(k_enc, cfg.n_enc_layers)),
+            "final_norm": init_rmsnorm(cfg.d_model, pdtype(cfg)),
+        }
+    return params
+
+
+def param_shapes(cfg: ModelConfig, key=None) -> Any:
+    key = key if key is not None else jax.random.PRNGKey(0)
+    return jax.eval_shape(lambda k: init_params(cfg, k), key)
+
+
+# ---------------------------------------------------------------------------
+# name-based parameter sharding axes
+# ---------------------------------------------------------------------------
+
+_AXES_TABLE = {
+    "wq": ("p_embed", "p_heads"), "wk": ("p_embed", "p_kv_heads"),
+    "wv": ("p_embed", "p_kv_heads"), "wo": ("p_heads", "p_embed"),
+    "bq": ("p_heads",), "bk": ("p_kv_heads",), "bv": ("p_kv_heads",),
+    "up": ("p_embed", "p_ff"), "gate": ("p_embed", "p_ff"),
+    "down": ("p_ff", "p_embed"),
+    "tok": ("p_vocab", "p_embed"), "unembed": ("p_embed", "p_vocab"),
+    "router": ("p_embed", None),
+    "w_gate": ("p_experts", "p_embed", "p_expert_ff"),
+    "w_up": ("p_experts", "p_embed", "p_expert_ff"),
+    "w_down": ("p_experts", "p_expert_ff", "p_embed"),
+    "in_proj": ("p_embed", "p_ff"), "out_proj": ("p_ff", "p_embed"),
+    "w_main": ("p_embed", "p_ff"), "w_gate_br": ("p_embed", "p_ff"),
+    "w_r": ("p_ff", None), "w_i": ("p_ff", None), "w_out": ("p_ff", "p_embed"),
+    "w": (None, "p_ff"),                       # conv kernels
+    "scale": (None,), "lam": ("p_ff",),
+    "A_log": (None,), "D": (None,), "dt_bias": (None,),
+}
+
+
+def param_axes(params) -> Any:
+    """Pytree of logical-axis tuples parallel to ``params`` (name-based)."""
+    return _axes_by_name(params, _AXES_TABLE)
+
+
+_CACHE_AXES_TABLE = {
+    # KV caches shard on the SEQUENCE dim over the model axis ("seq_kv"):
+    # kv_heads (often 8) rarely divide a 16-way model axis, and the
+    # divisibility fallback would replicate the dominant decode buffer.
+    "k": ("batch", "seq_kv", "kv_heads_cache", None),
+    "v": ("batch", "seq_kv", "kv_heads_cache", None),
+    "pos": ("seq_kv",),
+    "cross_k": ("batch", "seq_kv", "kv_heads_cache", None),
+    "cross_v": ("batch", "seq_kv", "kv_heads_cache", None),
+    "h": "H_SPECIAL",                    # rglru (B,w) vs ssd (B,H,N,P)
+    "conv": ("batch", None, "ff"),
+}
+
+
+def cache_axes(state) -> Any:
+    """Logical axes for a decode-state pytree (name-based)."""
+    def special(name, leaf):
+        if name == "h":
+            return (("batch", "heads", None, None) if leaf.ndim >= 4
+                    else ("batch", "ff"))
+        return None
+    return _axes_by_name(state, _CACHE_AXES_TABLE, special)
+
+
+def _axes_by_name(tree, table, special=None) -> Any:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    treedef = jax.tree_util.tree_structure(tree)
+
+    def axes_for(path, leaf):
+        name = None
+        for part in reversed(path):
+            if isinstance(part, jax.tree_util.DictKey):
+                name = part.key
+                break
+        ax = table.get(name, (None,) * leaf.ndim)
+        if special is not None and isinstance(ax, str):
+            ax = special(name, leaf)
+        if ax is None:
+            ax = (None,) * leaf.ndim
+        if len(ax) == leaf.ndim - 1:
+            ax = ("layers",) + tuple(ax)       # stacked period dim
+        if len(ax) != leaf.ndim:
+            ax = (None,) * leaf.ndim
+        return tuple(ax)
+
+    leaves = [axes_for(p, l) for p, l in flat]
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        pol = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=pol)
+    return jax.checkpoint(fn)
+
+
+def _encode(params, cfg: ModelConfig, enc_frames: jax.Array) -> jax.Array:
+    """Whisper encoder over precomputed frame embeddings (frontend stub)."""
+    x = enc_frames.astype(adtype(cfg))
+    F = x.shape[1]
+    pos = jnp.broadcast_to(jnp.arange(F)[None], x.shape[:2])
+
+    def body(x, lp):
+        x, _ = _apply_layer(lp, x, cfg, "attn_bidir", positions=pos)
+        return x, None
+
+    x, _ = jax.lax.scan(_maybe_remat(body, cfg), x, params["encoder"]["stack"])
+    return rmsnorm(params["encoder"]["final_norm"], x, cfg.norm_eps)
+
+
+def forward(params, cfg: ModelConfig, tokens: jax.Array, *,
+            positions: Optional[jax.Array] = None,
+            patches: Optional[jax.Array] = None,
+            enc_frames: Optional[jax.Array] = None,
+            last_only: bool = False,
+            return_hidden: bool = False
+            ) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence forward.  Returns (logits (B,S,V) f32, moe_aux).
+    ``last_only`` unembeds just the final position (prefill serving);
+    ``return_hidden`` skips unembedding (the chunked-CE loss path)."""
+    x = embed(params["embed"], tokens, cfg)
+    if patches is not None:                    # VLM stub: prefix patch embeds
+        x = jnp.concatenate([patches.astype(x.dtype), x], axis=1)
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    enc_out = _encode(params, cfg, enc_frames) if cfg.enc_dec else None
+    period = cfg.layer_pattern
+    n_full, n_rem = _period_split(cfg)
+
+    def period_body(carry, lp):
+        x, aux = carry
+        for i, kind in enumerate(period):
+            x, a = _apply_layer(lp[f"l{i}"], x, cfg, kind,
+                                positions=positions, enc_out=enc_out)
+            aux = aux + a
+        return (x, aux), None
+
+    aux0 = jnp.zeros((), jnp.float32)
+    (x, aux), _ = jax.lax.scan(_maybe_remat(period_body, cfg), (x, aux0),
+                               params["stack"])
+    for i in range(n_rem):
+        x, a = _apply_layer(params["rem"][f"l{i}"], x, cfg, period[i],
+                            positions=positions, enc_out=enc_out)
+        aux = aux + a
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if return_hidden:
+        return x, aux
+    if last_only:
+        x = x[:, -1:]
+    return unembed(params["embed"], x, cfg), aux
+
+
+# ---------------------------------------------------------------------------
+# decode (serve)
+# ---------------------------------------------------------------------------
+
+def _layer_cache(params_layer, cfg: ModelConfig, kind: str, batch: int,
+                 seq_len: int, dtype, enc_out=None) -> dict:
+    c: Dict[str, Any] = {}
+    if kind in ("attn", "attn_local", "moe"):
+        mode = "local" if kind == "attn_local" else "causal"
+        cap = attn.cache_capacity(cfg, mode, seq_len)
+        c["kv"] = attn.init_cache(cfg, batch, cap, mode, dtype)
+    elif kind == "rec":
+        c["state"] = ssm_mod.init_rglru_state(cfg, batch, dtype)
+    elif kind == "ssd":
+        c["state"] = ssm_mod.init_ssd_state(cfg, batch, dtype)
+    if cfg.enc_dec and kind != "attn_bidir":
+        k, v = attn._project_kv(params_layer["cross"], enc_out, cfg, cross=True)
+        c["cross_k"], c["cross_v"] = k, v
+    return c
+
+
+def init_decode_state(params, cfg: ModelConfig, batch: int, seq_len: int, *,
+                      enc_frames: Optional[jax.Array] = None) -> dict:
+    """Decode cache sized for a ``seq_len`` context (ring-capped for local
+    layers / O(1) for recurrent ones — the long_500k path)."""
+    dtype = adtype(cfg)
+    period = cfg.layer_pattern
+    n_full, n_rem = _period_split(cfg)
+    enc_out = _encode(params, cfg, enc_frames) if cfg.enc_dec else None
+
+    def one_period(lp):
+        return {f"l{i}": _layer_cache(lp[f"l{i}"], cfg, kind, batch, seq_len,
+                                      dtype, enc_out)
+                for i, kind in enumerate(period)}
+
+    state = {
+        "stack": jax.vmap(one_period)(params["stack"]) if n_full else {},
+        "rem": {f"l{i}": _layer_cache(params["rem"][f"l{i}"], cfg, period[i],
+                                      batch, seq_len, dtype, enc_out)
+                for i in range(n_rem)},
+    }
+    return state
+
+
+def _apply_layer_decode(p, c, x, cfg: ModelConfig, kind: str, *, pos):
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if kind in ("attn", "attn_local", "moe"):
+        mode = "local" if kind == "attn_local" else "causal"
+        y, kv = attn.decode_attention(p["attn"], h, c["kv"], cfg, pos=pos,
+                                      mode=mode)
+        x = x + y
+        c = dict(c, kv=kv)
+    elif kind == "rec":
+        y, st = ssm_mod.rglru_step(p["rec"], h, c["state"], cfg)
+        x = x + y
+        c = dict(c, state=st)
+    elif kind == "ssd":
+        y, st = ssm_mod.ssd_step(p["ssd"], h, c["state"], cfg)
+        x = x + y
+        c = dict(c, state=st)
+    if cfg.enc_dec and "cross" in p:
+        hx = rmsnorm(p["ln_x"], x, cfg.norm_eps)
+        y, _ = attn.decode_attention(p["cross"], hx, None, cfg, pos=pos,
+                                     mode="cross",
+                                     cross_kv=(c["cross_k"], c["cross_v"]))
+        x = x + y
+    if "mlp" in p:
+        x = x + mlp(p["mlp"], rmsnorm(p["ln2"], x, cfg.norm_eps), cfg)
+    elif "moe" in p:
+        y, _ = moe_mod.moe_mlp(p["moe"], rmsnorm(p["ln2"], x, cfg.norm_eps), cfg)
+        x = x + y
+    return x, c
+
+
+def decode_step(params, cfg: ModelConfig, state: dict, token: jax.Array,
+                pos: jax.Array) -> Tuple[jax.Array, dict]:
+    """One serve step: ``token`` (B, 1) → logits (B, 1, V), updated state."""
+    x = embed(params["embed"], token, cfg)
+    period = cfg.layer_pattern
+    n_full, n_rem = _period_split(cfg)
+
+    def period_body(x, scanned):
+        lp, lc = scanned
+        new_c = {}
+        for i, kind in enumerate(period):
+            x, new_c[f"l{i}"] = _apply_layer_decode(
+                lp[f"l{i}"], lc[f"l{i}"], x, cfg, kind, pos=pos)
+        return x, new_c
+
+    if n_full:
+        x, new_stack = jax.lax.scan(period_body, x,
+                                    (params["stack"], state["stack"]))
+    else:
+        new_stack = {}
+    new_rem = {}
+    for i in range(n_rem):
+        x, new_rem[f"l{i}"] = _apply_layer_decode(
+            params["rem"][f"l{i}"], state["rem"][f"l{i}"], x, cfg, period[i],
+            pos=pos)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params["embed"], x, cfg)
+    return logits, {"stack": new_stack, "rem": new_rem}

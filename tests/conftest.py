@@ -1,0 +1,9 @@
+"""Test configuration.
+
+x64 is enabled for solver accuracy tests (the paper's CPU baselines are
+f64).  XLA_FLAGS / device count are NOT touched here — smoke tests must see
+the real single CPU device; multi-device tests spawn subprocesses.
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)

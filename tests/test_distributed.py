@@ -1,0 +1,199 @@
+"""Distributed-layer tests.  Multi-device cases run in a subprocess with 8
+forced host devices (XLA device count locks at first jax use, so the main
+test process must keep its single real device)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_forced(src: str, n_dev: int = 8) -> str:
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={n_dev}",
+               PYTHONPATH=os.path.join(REPO, "src"))
+    proc = subprocess.run([sys.executable, "-c", src], capture_output=True,
+                          text=True, env=env, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    return proc.stdout
+
+
+PREAMBLE = """
+import jax, numpy as np, jax.numpy as jnp
+jax.config.update("jax_enable_x64", True)
+from jax.sharding import Mesh
+from repro.core.distributed import (DSparseTensor, halo_exchange,
+                                    partition_simple, partition_coordinate,
+                                    pipelined_cg)
+from repro.core.sparse import SparseTensor
+from repro.data.poisson import poisson1d
+
+n = 192
+A1 = poisson1d(n)
+vals, rows, cols = np.asarray(A1.val), np.asarray(A1.row), np.asarray(A1.col)
+mesh = jax.make_mesh((8,), ("data",),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+D = DSparseTensor.from_global(vals, rows, cols, (n, n), mesh)
+As = SparseTensor(vals, rows, cols, (n, n))
+b = np.linspace(0.5, 1.5, n)
+bs = D.stack_vector(b)
+"""
+
+
+def test_distributed_solve_matches_single_device():
+    out = run_forced(PREAMBLE + textwrap.dedent("""
+        x = D.gather_global(D.solve(bs, tol=1e-12, maxiter=4000))
+        x_ref = np.asarray(As.solve(jnp.asarray(b), backend="jnp",
+                                    method="cg", tol=1e-12, maxiter=4000))
+        print("ERR", np.abs(x - x_ref).max() / np.abs(x_ref).max())
+    """))
+    assert float(out.split("ERR")[1]) < 1e-9
+
+
+def test_distributed_matvec_and_halo_adjoint():
+    out = run_forced(PREAMBLE + textwrap.dedent("""
+        # matvec
+        xt = np.random.default_rng(0).normal(size=n)
+        yd = D.gather_global(D.matvec(D.stack_vector(xt)))
+        ys = np.asarray(As @ jnp.asarray(xt))
+        print("MV", np.abs(yd - ys).max())
+
+        # halo exchange: Hᵀ is the true adjoint (⟨Hx, y⟩ = ⟨x, Hᵀy⟩)
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        from functools import partial
+        n_loc = n // 8
+        @partial(shard_map, mesh=mesh, in_specs=P("data"), out_specs=P("data"),
+                 check_rep=False)
+        def H(x):
+            return halo_exchange(x, 2, 3, "data")
+        x = jnp.asarray(np.random.default_rng(1).normal(size=n))
+        y = jnp.asarray(np.random.default_rng(2).normal(size=8 * (n_loc + 5)))
+        Hx = H(x)
+        lhs = float(jnp.vdot(Hx, y))
+        g = jax.vjp(H, x)[1](y)[0]
+        rhs = float(jnp.vdot(x, g))
+        print("ADJ", abs(lhs - rhs) / abs(lhs))
+    """))
+    assert float(out.split("MV")[1].split()[0]) < 1e-12
+    assert float(out.split("ADJ")[1]) < 1e-12
+
+
+def test_distributed_gradients_match_single_device():
+    out = run_forced(PREAMBLE + textwrap.dedent("""
+        def loss_dist(lval, bstack):
+            A2 = DSparseTensor(D.meta, lval, D.lrow, D.lcol, D.mesh)
+            return jnp.sum(A2.solve(bstack, tol=1e-13, maxiter=4000) ** 2)
+        gd_val, gd_b = jax.grad(loss_dist, (0, 1))(D.lval, bs)
+        def loss_single(v, bb):
+            x = As.with_values(v).solve(bb, backend="jnp", method="cg",
+                                        tol=1e-13, maxiter=4000)
+            return jnp.sum(x ** 2)
+        gs_val, gs_b = jax.grad(loss_single, (0, 1))(jnp.asarray(vals),
+                                                     jnp.asarray(b))
+        bounds = partition_simple(n, 8)
+        gv = np.zeros(len(vals))
+        for q in range(8):
+            s, e = bounds[q], bounds[q + 1]
+            m = (rows >= s) & (rows < e)
+            gv[m] = np.asarray(gd_val)[q][:m.sum()]
+        rel = np.abs(gv - np.asarray(gs_val)) / (np.abs(gs_val) + 1e-30)
+        print("GV", rel.max())
+        print("GB", np.abs(D.gather_global(gd_b) - np.asarray(gs_b)).max()
+              / np.abs(np.asarray(gs_b)).max())
+    """))
+    assert float(out.split("GV")[1].split()[0]) < 1e-9
+    assert float(out.split("GB")[1]) < 1e-9
+
+
+def test_pipelined_cg_and_compressed_halo():
+    out = run_forced(PREAMBLE + textwrap.dedent("""
+        xp = D.gather_global(D.solve(bs, tol=1e-11, maxiter=4000,
+                                     pipelined=True))
+        res = np.abs(np.asarray(As @ jnp.asarray(xp)) - b).max()
+        print("PIPE", res)
+
+        # compressed halo exchange: int8 payload, own values exact
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        from functools import partial
+        from repro.optim.compress import compressed_halo_exchange
+        @partial(shard_map, mesh=mesh, in_specs=P("data"), out_specs=P("data"),
+                 check_rep=False)
+        def Hq(x):
+            return compressed_halo_exchange(x, 1, 1, "data")
+        @partial(shard_map, mesh=mesh, in_specs=P("data"), out_specs=P("data"),
+                 check_rep=False)
+        def H(x):
+            return halo_exchange(x, 1, 1, "data")
+        x = jnp.asarray(np.random.default_rng(3).normal(size=n))
+        err = jnp.abs(Hq(x) - H(x))
+        print("CQ", float(jnp.max(err)), float(jnp.max(jnp.abs(x))))
+    """))
+    assert float(out.split("PIPE")[1].split()[0]) < 1e-7
+    parts = out.split("CQ")[1].split()
+    err, scale = float(parts[0]), float(parts[1])
+    assert err <= scale / 127.0 + 1e-9     # int8 quantization bound
+
+
+def test_distributed_eigsh():
+    out = run_forced(PREAMBLE + textwrap.dedent("""
+        w, V = DSparseTensor(D.meta, D.lval, D.lrow, D.lcol, D.mesh).eigsh(
+            k=3, tol=1e-10, maxiter=3000)
+        wr = np.sort(np.linalg.eigvalsh(np.asarray(As.todense())))[:3]
+        print("EW", np.abs(np.asarray(w) - wr).max())
+    """))
+    assert float(out.split("EW")[1]) < 1e-7
+
+
+def test_partition_utilities():
+    from repro.core.distributed import partition_coordinate, partition_simple
+    b = partition_simple(103, 8)
+    assert b[0] == 0 and b[-1] == 103 and len(b) == 9
+    assert (np.diff(b) >= 103 // 8).all()
+    rng = np.random.default_rng(0)
+    coords = rng.normal(size=(64, 2))
+    perm = partition_coordinate(coords, 4)
+    assert sorted(perm.tolist()) == list(range(64))
+
+
+def test_nonsymmetric_distributed_solve():
+    out = run_forced(PREAMBLE + textwrap.dedent("""
+        v2 = vals.copy()
+        v2[cols == rows - 1] = -1.3
+        v2[cols == rows + 1] = -0.7
+        Dn = DSparseTensor.from_global(v2, rows, cols, (n, n), mesh)
+        assert not Dn.meta.symmetric
+        xs = Dn.solve(Dn.stack_vector(b), tol=1e-11, maxiter=6000)
+        An = SparseTensor(v2, rows, cols, (n, n))
+        res = np.abs(np.asarray(An @ jnp.asarray(Dn.gather_global(xs))) - b).max()
+        print("NS", res)
+        # gradient through the transposed-partition adjoint
+        def loss(lval):
+            A2 = DSparseTensor(Dn.meta, lval, Dn.lrow, Dn.lcol, Dn.mesh,
+                               Dn.lval_t, Dn.lrow_t, Dn.lcol_t)
+            return jnp.sum(A2.solve(Dn.stack_vector(b), tol=1e-12,
+                                    maxiter=6000) ** 2)
+        g = jax.grad(loss)(Dn.lval)
+        def loss_s(v):
+            x = An.with_values(v).solve(jnp.asarray(b), backend="jnp",
+                                        method="bicgstab", tol=1e-12,
+                                        maxiter=6000)
+            return jnp.sum(x ** 2)
+        gs = jax.grad(loss_s)(jnp.asarray(v2))
+        from repro.core.distributed import partition_simple
+        bounds = partition_simple(n, 8)
+        gv = np.zeros(len(v2))
+        for q in range(8):
+            s, e = bounds[q], bounds[q + 1]
+            m = (rows >= s) & (rows < e)
+            gv[m] = np.asarray(g)[q][:m.sum()]
+        rel = np.abs(gv - np.asarray(gs)) / (np.abs(np.asarray(gs)).max())
+        print("NG", rel.max())
+    """))
+    assert float(out.split("NS")[1].split()[0]) < 1e-7
+    assert float(out.split("NG")[1]) < 1e-6

@@ -1,0 +1,119 @@
+"""Per-architecture smoke tests: reduced same-family config, one forward +
+one train step on CPU; output shapes + no NaNs.  Plus decode↔forward
+consistency for one arch per family."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, smoke_variant
+from repro.models import transformer as T
+from repro.optim.adamw import AdamWConfig, init_opt_state
+from repro.launch.train import make_train_step
+
+
+def _batch(cfg, B=2, S=24, seed=0):
+    toks = jax.random.randint(jax.random.PRNGKey(seed), (B, S), 0, cfg.vocab)
+    batch = {"tokens": toks, "labels": toks}
+    if cfg.vis_patches:
+        P = cfg.vis_patches
+        batch["patches"] = jnp.zeros((B, P, cfg.d_model), jnp.dtype(cfg.dtype))
+        batch["labels"] = jnp.concatenate(
+            [-jnp.ones((B, P), jnp.int32), toks], axis=1)
+    if cfg.enc_dec:
+        batch["enc_frames"] = jax.random.normal(
+            jax.random.PRNGKey(7), (B, cfg.enc_frames, cfg.d_model),
+            jnp.dtype(cfg.dtype))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke_forward_and_train_step(arch):
+    cfg = smoke_variant(get_config(arch))
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    logits, aux = T.forward(params, cfg, batch["tokens"],
+                            patches=batch.get("patches"),
+                            enc_frames=batch.get("enc_frames"))
+    B = batch["tokens"].shape[0]
+    S_total = batch["labels"].shape[1]
+    assert logits.shape == (B, S_total, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+    step = jax.jit(make_train_step(cfg, AdamWConfig(lr=1e-3, warmup_steps=1,
+                                                    total_steps=10)))
+    state = {"params": params, "opt": init_opt_state(params)}
+    state, metrics = step(state, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert bool(jnp.isfinite(metrics["grad_norm"]))
+    # params actually changed
+    delta = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))),
+                         state["params"], params)
+    assert max(jax.tree.leaves(delta)) > 0
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "recurrentgemma-2b",
+                                  "mamba2-780m", "granite-moe-1b-a400m",
+                                  "whisper-medium"])
+def test_decode_matches_forward(arch):
+    cfg = smoke_variant(get_config(arch))
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 20
+    batch = _batch(cfg, B=B, S=S)
+    logits, _ = T.forward(params, cfg, batch["tokens"],
+                          enc_frames=batch.get("enc_frames"))
+    state = T.init_decode_state(params, cfg, B, S,
+                                enc_frames=batch.get("enc_frames"))
+    outs = []
+    for t in range(S):
+        lg, state = T.decode_step(params, cfg, state,
+                                  batch["tokens"][:, t:t + 1], jnp.array(t))
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(logits),
+                               atol=5e-4)
+
+
+def test_local_attention_ring_cache_beyond_window():
+    """Decode past the window: ring cache must equal full forward with the
+    local mask (the long_500k mechanism)."""
+    cfg = smoke_variant(get_config("recurrentgemma-2b"))
+    assert cfg.window == 16
+    params = T.init_params(cfg, jax.random.PRNGKey(1))
+    B, S = 1, 40            # > 2× window
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0, cfg.vocab)
+    logits, _ = T.forward(params, cfg, toks)
+    state = T.init_decode_state(params, cfg, B, S)
+    # cache capacity capped at the window
+    caps = [v.shape[2] for k, v in jax.tree_util.tree_flatten_with_path(
+        state)[0] if "k" == str(getattr(k[-1], "key", ""))]
+    assert caps and all(c <= cfg.window for c in caps)
+    outs = []
+    for t in range(S):
+        lg, state = T.decode_step(params, cfg, state, toks[:, t:t + 1],
+                                  jnp.array(t))
+        outs.append(lg[:, 0])
+    np.testing.assert_allclose(np.asarray(jnp.stack(outs, 1)),
+                               np.asarray(logits), atol=5e-4)
+
+
+def test_param_count_analytic_vs_actual():
+    for arch in ("llama3.2-1b", "mamba2-780m", "granite-moe-1b-a400m"):
+        cfg = smoke_variant(get_config(arch))
+        params = T.init_params(cfg, jax.random.PRNGKey(0))
+        actual = sum(x.size for x in jax.tree.leaves(params))
+        analytic = cfg.param_count()
+        assert abs(actual - analytic) / actual < 0.35, (arch, actual, analytic)
+
+
+def test_param_axes_cover_all_leaves():
+    cfg = smoke_variant(get_config("dbrx-132b"))
+    shapes = T.param_shapes(cfg)
+    axes = T.param_axes(shapes)
+    is_ax = lambda x: isinstance(x, tuple) and all(
+        isinstance(i, (str, type(None))) for i in x)
+    ax_leaves = jax.tree_util.tree_flatten(axes, is_leaf=is_ax)[0]
+    shape_leaves = jax.tree_util.tree_flatten(shapes)[0]
+    assert len(ax_leaves) == len(shape_leaves)
+    for ax, leaf in zip(ax_leaves, shape_leaves):
+        assert len(ax) == leaf.ndim

@@ -1,0 +1,172 @@
+"""Solver correctness vs scipy/dense references (paper Table 3 behaviours)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+import scipy.sparse as sp
+import scipy.sparse.linalg as spla
+
+from repro.core import SparseTensor, solvers
+from repro.core.dispatch import make_config, select_backend
+from repro.core import precond
+from repro.data.poisson import poisson1d, poisson2d
+
+
+@pytest.fixture(scope="module")
+def A2d():
+    return poisson2d(16)   # 256 dof
+
+
+def to_scipy(A):
+    return sp.coo_matrix((np.asarray(A.val), (np.asarray(A.row),
+                                              np.asarray(A.col))),
+                         shape=A.shape).tocsr()
+
+
+def test_cg_matches_scipy(A2d):
+    b = np.random.default_rng(0).normal(size=A2d.shape[0])
+    x_ref = spla.spsolve(to_scipy(A2d), b)
+    x = A2d.solve(jnp.asarray(b), backend="jnp", method="cg", tol=1e-12)
+    np.testing.assert_allclose(np.asarray(x), x_ref, rtol=1e-8)
+
+
+def _convection_diffusion(n, c=0.3):
+    """tridiag(−1−c, 2, −1+c): non-symmetric, positive spectrum."""
+    A1 = poisson1d(n)
+    val = np.asarray(A1.val).copy()
+    val[np.asarray(A1.col) == np.asarray(A1.row) - 1] = -1.0 - c
+    val[np.asarray(A1.col) == np.asarray(A1.row) + 1] = -1.0 + c
+    return SparseTensor(val, A1.row, A1.col, (n, n))
+
+
+def test_bicgstab_nonsymmetric():
+    rng = np.random.default_rng(1)
+    n = 80
+    A = _convection_diffusion(n)
+    assert not A.props["symmetric"]
+    b = rng.normal(size=n)
+    x = A.solve(jnp.asarray(b), backend="jnp", method="bicgstab", tol=1e-12,
+                maxiter=4000)
+    np.testing.assert_allclose(np.asarray(A @ x), b, atol=1e-8)
+
+
+def test_gmres():
+    rng = np.random.default_rng(2)
+    n = 60
+    A = _convection_diffusion(n, c=0.4)
+    b = rng.normal(size=n)
+    x = A.solve(jnp.asarray(b), backend="jnp", method="gmres", tol=1e-10,
+                maxiter=2000)
+    np.testing.assert_allclose(np.asarray(A @ x), b, atol=1e-6)
+
+
+def test_dense_backend_cholesky(A2d):
+    b = np.random.default_rng(3).normal(size=A2d.shape[0])
+    x = A2d.solve(jnp.asarray(b), backend="dense", method="cholesky")
+    np.testing.assert_allclose(np.asarray(A2d @ x), b, atol=1e-9)
+
+
+def test_auto_dispatch_policy(A2d):
+    # small SPD → dense cholesky
+    b, m = select_backend(A2d, "auto", "auto")
+    assert (b, m) == ("dense", "cholesky")
+    # large → iterative cg (symmetric)
+    big = poisson2d(80)    # 6400 > DENSE_BUDGET
+    b2, m2 = select_backend(big, "auto", "auto")
+    assert (b2, m2) == ("jnp", "cg")
+    # explicit override honored
+    b3, m3 = select_backend(A2d, "jnp", "bicgstab")
+    assert (b3, m3) == ("jnp", "bicgstab")
+
+
+def test_batched_shared_pattern_solve(A2d):
+    rng = np.random.default_rng(4)
+    vals = jnp.stack([A2d.val, A2d.val * 2.0])
+    Ab = SparseTensor(vals, A2d.row, A2d.col, A2d.shape, props=A2d.props)
+    bs = jnp.asarray(rng.normal(size=(2, A2d.shape[0])))
+    xs = Ab.solve(bs, backend="jnp", method="cg", tol=1e-12)
+    for i, scale in enumerate((1.0, 2.0)):
+        Ai = SparseTensor(np.asarray(A2d.val) * scale, A2d.row, A2d.col,
+                          A2d.shape)
+        np.testing.assert_allclose(np.asarray(Ai @ xs[i]), np.asarray(bs[i]),
+                                   atol=1e-8)
+
+
+@pytest.mark.parametrize("name", ["jacobi", "block_jacobi", "chebyshev"])
+def test_preconditioners_accelerate(A2d, name):
+    b = jnp.ones(A2d.shape[0])
+    from repro.core.dispatch import make_matvec
+    mv = make_matvec(A2d)
+    M = precond.make_preconditioner(name, A2d, mv)
+    x, info = solvers.cg(mv, b, M=M, tol=1e-10, maxiter=2000)
+    x0, info0 = solvers.cg(mv, b, tol=1e-10, maxiter=2000)
+    assert bool(info.converged)
+    assert float(jnp.linalg.norm(A2d @ x - b)) < 1e-7
+    if name != "jacobi":   # Poisson diagonal is constant → jacobi = identity
+        assert int(info.iters) <= int(info0.iters)
+
+
+def test_nonlinear_newton_picard_anderson():
+    n = 32
+    A = poisson1d(n)
+    b = jnp.linspace(0.5, 1.5, n)
+
+    def F(u):
+        return A @ u + 0.1 * u ** 3 - b
+
+    for method, tol in (("newton", 1e-12), ("picard", 1e-10),
+                        ("anderson", 1e-10)):
+        if method == "newton":
+            u, info = solvers.newton_solve(F, jnp.zeros(n), tol=tol)
+        elif method == "picard":
+            u, info = solvers.picard_solve(lambda u: u - 0.2 * F(u),
+                                           jnp.zeros(n), tol=tol, maxiter=5000)
+        else:
+            u, info = solvers.anderson_solve(lambda u: u - 0.2 * F(u),
+                                             jnp.zeros(n), tol=tol,
+                                             maxiter=2000)
+        assert float(jnp.linalg.norm(F(u))) < 1e-6, method
+
+
+def aniso_poisson2d(ng, cy=0.6):
+    """2D Poisson with anisotropic y-coupling — breaks the square-grid
+    eigenvalue degeneracy (the paper targets simple eigenvalues, §5)."""
+    A = poisson2d(ng)
+    val = np.asarray(A.val).copy()
+    row, col = np.asarray(A.row), np.asarray(A.col)
+    y_edge = np.abs(row - col) == 1
+    val[y_edge] *= cy
+    val[row == col] = 2.0 + 2.0 * cy
+    return SparseTensor(val, row, col, A.shape)
+
+
+def test_lobpcg_and_lanczos_eigenvalues():
+    A = aniso_poisson2d(10)
+    w_ref = np.sort(np.linalg.eigvalsh(np.asarray(A.todense())))
+    w, V = A.eigsh(k=4, method="lobpcg", tol=1e-11, maxiter=2000)
+    np.testing.assert_allclose(np.asarray(w), w_ref[:4], atol=1e-7)
+    # residuals ‖Av − λv‖ small
+    for i in range(4):
+        r = A @ V[i] - w[i] * V[i]
+        assert float(jnp.linalg.norm(r)) < 1e-6
+    w2, V2 = A.eigsh(k=3, method="lanczos")
+    np.testing.assert_allclose(np.asarray(w2), w_ref[:3], atol=1e-6)
+
+
+def test_largest_eigenpairs():
+    A = aniso_poisson2d(8)
+    w_ref = np.sort(np.linalg.eigvalsh(np.asarray(A.todense())))
+    from repro.core.adjoint import sparse_eigsh
+    w, V = sparse_eigsh(A, 2, largest=True, tol=1e-11, maxiter=1500,
+                        compute_vector_grads=False)
+    np.testing.assert_allclose(np.sort(np.asarray(w)), w_ref[-2:], atol=1e-6)
+
+
+def test_solve_info_reports_convergence():
+    A = poisson2d(12)
+    from repro.core.adjoint import sparse_solve_with_info
+    cfg = make_config(A, backend="jnp", method="cg", tol=1e-10)
+    x, info = sparse_solve_with_info(cfg, A, jnp.ones(A.shape[0]))
+    assert bool(info.converged)
+    assert int(info.iters) > 0
+    assert float(info.resnorm) < 1e-7 * np.linalg.norm(np.ones(A.shape[0])) * 10

@@ -1,0 +1,116 @@
+"""SparseTensor data-structure tests + hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import SparseTensor, SparseTensorList, build_bell, coo_matvec
+from repro.data.poisson import poisson1d, poisson2d
+
+
+def random_coo(rng, n, m, density=0.1):
+    nnz = max(1, int(n * m * density))
+    row = rng.integers(0, n, nnz)
+    col = rng.integers(0, m, nnz)
+    keys = np.unique(row.astype(np.int64) * m + col)
+    row = (keys // m).astype(np.int32)
+    col = (keys % m).astype(np.int32)
+    val = rng.normal(size=len(row))
+    return val, row, col
+
+
+def test_matvec_matches_dense():
+    rng = np.random.default_rng(0)
+    val, row, col = random_coo(rng, 40, 30)
+    A = SparseTensor(val, row, col, (40, 30))
+    x = rng.normal(size=30)
+    np.testing.assert_allclose(np.asarray(A @ jnp.asarray(x)),
+                               np.asarray(A.todense()) @ x, rtol=1e-12)
+
+
+def test_transpose_and_rmatvec():
+    rng = np.random.default_rng(1)
+    val, row, col = random_coo(rng, 25, 35)
+    A = SparseTensor(val, row, col, (25, 35))
+    y = rng.normal(size=25)
+    np.testing.assert_allclose(np.asarray(A.rmatvec(jnp.asarray(y))),
+                               np.asarray(A.todense()).T @ y, rtol=1e-12)
+    assert A.T.shape == (35, 25)
+
+
+def test_batched_matvec_broadcasting():
+    rng = np.random.default_rng(2)
+    val, row, col = random_coo(rng, 20, 20)
+    valb = np.stack([val, 2 * val, -val])
+    A = SparseTensor(valb, row, col, (20, 20))
+    x = rng.normal(size=(3, 20))
+    y = A @ jnp.asarray(x)
+    assert y.shape == (3, 20)
+    for b in range(3):
+        np.testing.assert_allclose(
+            np.asarray(y[b]),
+            np.asarray(SparseTensor(valb[b], row, col, (20, 20)).todense()) @ x[b],
+            rtol=1e-12)
+
+
+def test_pytree_roundtrip():
+    A = poisson1d(16)
+    leaves, treedef = jax.tree_util.tree_flatten(A)
+    A2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert A2.shape == A.shape
+    np.testing.assert_array_equal(np.asarray(A2.val), np.asarray(A.val))
+
+    @jax.jit
+    def through_jit(A):
+        return A @ jnp.ones(16)
+
+    y = through_jit(A)
+    assert y.shape == (16,)
+
+
+def test_property_detection():
+    A = poisson2d(8)
+    assert A.props["symmetric"]
+    assert A.props["spd_hint"]
+    rng = np.random.default_rng(3)
+    val, row, col = random_coo(rng, 20, 20, 0.2)
+    B = SparseTensor(val, row, col, (20, 20))
+    assert not B.props["symmetric"]
+
+
+def test_diagonal():
+    A = poisson2d(5)
+    np.testing.assert_allclose(np.asarray(A.diagonal()), np.full(25, 4.0))
+
+
+def test_sparse_tensor_list():
+    rng = np.random.default_rng(4)
+    mats, rhs = [], []
+    for n in (10, 17, 23):
+        val, row, col = random_coo(rng, n, n, 0.3)
+        val = np.concatenate([val, np.full(n, n * 1.0)])
+        row = np.concatenate([row, np.arange(n)]).astype(np.int32)
+        col = np.concatenate([col, np.arange(n)]).astype(np.int32)
+        mats.append(SparseTensor(val, row, col, (n, n)))
+        rhs.append(jnp.asarray(rng.normal(size=n)))
+    L = SparseTensorList(mats)
+    xs = L.solve(rhs, tol=1e-12)
+    for A, b, x in zip(mats, rhs, xs):
+        assert float(jnp.linalg.norm(A @ x - b)) < 1e-8
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(5, 60), m=st.integers(5, 60), seed=st.integers(0, 999))
+def test_bell_layout_property(n, m, seed):
+    """Block-ELL matvec ≡ COO matvec for arbitrary random patterns."""
+    rng = np.random.default_rng(seed)
+    val, row, col = random_coo(rng, n, m, 0.15)
+    from repro.kernels import ops
+    meta, bcols, perm = build_bell(row, col, (n, m), bm=8, bn=128)
+    x = jnp.asarray(rng.normal(size=m))
+    v = jnp.asarray(val)
+    y_bell = ops.bell_matvec_ref(meta, bcols, perm, v, x, n)
+    y_coo = coo_matvec(v, jnp.asarray(row), jnp.asarray(col), x, n)
+    np.testing.assert_allclose(np.asarray(y_bell), np.asarray(y_coo),
+                               rtol=1e-10, atol=1e-10)

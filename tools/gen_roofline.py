@@ -1,0 +1,54 @@
+"""Generate the EXPERIMENTS.md §Roofline table from results/dryrun.jsonl."""
+import json
+import sys
+from collections import defaultdict
+
+
+def fmt_t(s):
+    return f"{s*1e3:.1f}" if s < 10 else f"{s:.2f}e3"
+
+
+def main(ledger="results/dryrun.jsonl", mesh="16x16", variant="baseline"):
+    recs = [json.loads(l) for l in open(ledger)]
+    cells = {}
+    for r in recs:
+        if r.get("rules", "baseline") == variant and r["mesh"] == mesh:
+            cells[(r["arch"], r["shape"])] = r
+
+    from repro.configs import ARCH_IDS, SHAPES
+
+    print("| arch | shape | GiB/dev | t_comp ms | t_mem ms | t_coll ms | "
+          "dominant | useful | roofline frac |")
+    print("|---|---|--:|--:|--:|--:|---|--:|--:|")
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            r = cells.get((arch, shape))
+            if r is None:
+                continue
+            if r["status"] == "skipped":
+                print(f"| {arch} | {shape} | — | — | — | — | *skipped: "
+                      f"full attention, quadratic at 524k* | — | — |")
+                continue
+            if r["status"] != "ok":
+                print(f"| {arch} | {shape} | ERROR | | | | | | |")
+                continue
+            tc, tm, tl = (r["t_compute_s"], r["t_memory_s"],
+                          r["t_collective_s"])
+            dom = max(tc, tm, tl)
+            frac = tc / dom if dom else 0.0
+            useful = r.get("useful_ratio") or 0.0
+            print(f"| {arch} | {shape} | {r['bytes_per_device']/2**30:.2f} | "
+                  f"{tc*1e3:.1f} | {tm*1e3:.1f} | {tl*1e3:.1f} | "
+                  f"{r['dominant']} | {useful*100:.0f}% | {frac:.2f} |")
+
+    # mesh comparison summary
+    multi = {(r["arch"], r["shape"]): r for r in recs
+             if r.get("rules", "baseline") == variant
+             and r["mesh"] == "2x16x16" and r["status"] == "ok"}
+    print()
+    print(f"Single-pod cells: {sum(1 for r in cells.values() if r['status']=='ok')} ok; "
+          f"multi-pod cells: {len(multi)} ok.")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])
