@@ -9,12 +9,15 @@ Public API mirrors torch-sla:
 """
 from .sparse import SparseTensor, SparseTensorList, coo_matvec, build_bell
 from .adjoint import nonlinear_solve, sparse_solve, sparse_eigsh
-from .dispatch import SolverConfig, make_config, select_backend, register_backend
+from .dispatch import (SolverConfig, SolverPlan, get_plan, make_config,
+                       select_backend, register_backend, PLAN_STATS,
+                       reset_plan_stats)
 from . import solvers, precond
 
 __all__ = [
     "SparseTensor", "SparseTensorList", "coo_matvec", "build_bell",
     "nonlinear_solve", "sparse_solve", "sparse_eigsh",
-    "SolverConfig", "make_config", "select_backend", "register_backend",
+    "SolverConfig", "SolverPlan", "get_plan", "make_config",
+    "select_backend", "register_backend", "PLAN_STATS", "reset_plan_stats",
     "solvers", "precond",
 ]

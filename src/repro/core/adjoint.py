@@ -44,29 +44,32 @@ def _sum_to_shape(x: jax.Array, shape) -> jax.Array:
 
 def sparse_solve(cfg: SolverConfig, A: SparseTensor, b: jax.Array,
                  x0: Optional[jax.Array] = None) -> jax.Array:
-    """Differentiable A.solve(b).  ``cfg`` must already be resolved."""
-    row, col = A.row, A.col
+    """Differentiable A.solve(b).  ``cfg`` must already be resolved.
+
+    The forward fetches (or analyzes once) the pattern's cached
+    :class:`~repro.core.dispatch.SolverPlan`; the backward solves Aᵀλ = g
+    through ``plan.transpose()`` — the SAME plan object for symmetric
+    patterns (kernel layout + preconditioner build reused), a once-analyzed
+    transposed sibling otherwise.  No re-dispatch, no re-analysis per call.
+    """
+    plan = _dispatch.get_plan(A, cfg)
+    row, col = plan.row, plan.col
 
     @jax.custom_vjp
     def solve_fn(val, rhs):
-        x, _ = _dispatch.solve_impl(cfg, A.with_values(val), rhs, x0)
+        x, _ = plan.solve(plan.matrix(val), rhs, x0, cfg=cfg)
         return x
 
     def fwd(val, rhs):
-        x, _ = _dispatch.solve_impl(cfg, A.with_values(val), rhs, x0)
+        x, _ = plan.solve(plan.matrix(val), rhs, x0, cfg=cfg)
         x = jax.lax.stop_gradient(x)
         return x, (val, x)
 
     def bwd(res, g):
         val, x = res
-        # adjoint system Aᵀ λ = g — reuse the same backend (paper §3.2.3);
-        # transpose is a row/col swap; symmetric patterns keep kernel layouts.
-        if A.props.get("symmetric", False):
-            At = A.with_values(val)
-        else:
-            At = SparseTensor(val, col, row, (A.shape[1], A.shape[0]),
-                              props=A.props, validate=False)
-        lam, _ = _dispatch.solve_impl(cfg.transposed_for(A), At, g, None)
+        # adjoint system Aᵀ λ = g — forward plan's transpose view (§3.2.3)
+        tplan = plan.transpose()
+        lam, _ = tplan.solve(tplan.matrix(val), g, None, cfg=tplan.adapt(cfg))
         # ∂L/∂A_ij = −λ_i x_j  on the sparsity pattern — O(nnz)
         gval_full = -(lam[..., row] * x[..., col])
         gval = _sum_to_shape(gval_full, val.shape)

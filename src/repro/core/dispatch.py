@@ -1,7 +1,7 @@
-"""Backend abstraction + auto-dispatch (paper §3.1, Appendix A Table 6).
+"""Backend registry + plan-cached auto-dispatch (paper §3.1, §3.2.3, App. A).
 
-Five interchangeable backends behind one API — the TPU/JAX analogue of
-torch-sla's {scipy, eigen, cudss, cupy, pytorch}:
+Four built-in backends behind one API — the TPU/JAX analogue of torch-sla's
+{scipy, eigen, cudss, cupy, pytorch}:
 
 | backend   | device  | methods                      | regime                         |
 |-----------|---------|------------------------------|--------------------------------|
@@ -11,33 +11,67 @@ torch-sla's {scipy, eigen, cudss, cupy, pytorch}:
 | stencil   | TPU     | cg, bicgstab                 | matrix-free structured grids   |
 | dist      | mesh    | cg, bicgstab, pipelined_cg   | DSparseTensor (core/distributed)|
 
-Dispatch policy (mirrors paper §3.1 rules, TPU constants):
-  (i)   honor explicit ``backend=``/``method=`` overrides;
-  (ii)  direct below the dense budget (paper: cuDSS below the fill-in budget);
-  (iii) iterative above, preferring the Pallas/stencil SpMV when the tensor
-        carries that layout; CG when SPD-ish, BiCGStab otherwise.
+Plan lifecycle (paper §3.2.3 "one symbolic setup per pattern")
+--------------------------------------------------------------
+Every solve goes through a three-stage split::
 
-Extensibility: ``register_backend`` adds a backend exactly like torch-sla's
-``select_backend`` registration — implement ``solve(cfg, A, b, x0)`` and an
-applicability predicate.
+    plan  = get_plan(A, cfg)        # ❶ analyze(pattern)  — eager, cached
+    state = plan.setup(A)           # ❷ setup(values)     — traced-safe
+    x, info = plan.solve(A, b, x0)  # ❸ solve(b)          — runs ❷ then Krylov/LU
+
+❶ ``analyze`` runs ONCE per (sparsity pattern, backend/method/precond): it
+picks the backend class, freezes the kernel layout (block-ELL / stencil
+metadata), and builds the pattern-level half of the preconditioner
+(:class:`repro.core.precond.PreconditionerPlan`).  Plans are cached on the
+``SparseTensor`` keyed by ``SolverConfig.plan_key()`` — solve-loop knobs
+(tol/atol/maxiter/restart) are NOT part of the key, so a tolerance sweep or
+continuation loop reuses one plan — and the cache dict is *shared* by
+``with_values``, so the jit/grad hot path and every solve in a
+shared-pattern batch reuse one analysis.
+
+❷ ``setup`` consumes the current (possibly traced) values: preconditioner
+refresh (block inverses, Chebyshev spectrum bounds, MG hierarchy), dense
+materialization.  It never touches numpy, so it is safe under jit/grad/vmap.
+
+❸ ``solve`` executes the configured method.  The adjoint layer
+(:mod:`repro.core.adjoint`) fetches ``plan.transpose()`` for the backward
+system Aᵀλ = g: for symmetric patterns that is the SAME plan object (BELL
+layout and preconditioner build reused); for non-symmetric patterns a
+transposed sibling plan is analyzed once and cached on the forward plan.
+
+``PLAN_STATS`` counts analyze/setup/cache events so tests (and profiles) can
+assert reuse; ``register_backend`` adds custom backends either as a
+``Backend`` subclass or as a legacy ``solve(cfg, A, b, x0)`` function.
 """
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Callable, Optional
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from . import precond as _precond
 from . import solvers as _solvers
-from .sparse import SparseTensor, coo_matvec
+from .sparse import SparseTensor, build_bell, coo_matvec
 
 DENSE_BUDGET = 4096          # TPU dense-direct crossover (measured, see EXPERIMENTS.md)
 DEFAULT_MAXITER = 2000
 
-_REGISTRY: dict = {}
+# observable analyze/setup/cache counters (reset with ``reset_plan_stats``)
+PLAN_STATS: Dict[str, int] = {
+    "analyze": 0,          # SolverPlan constructions (pattern analyses)
+    "setup": 0,            # values-dependent setups
+    "cache_hit": 0,        # plan served from a SparseTensor's plan cache
+    "cache_miss": 0,       # plan analyzed fresh
+    "transpose_shared": 0,  # adjoint reused the forward plan (symmetric)
+}
+
+
+def reset_plan_stats() -> None:
+    for k in PLAN_STATS:
+        PLAN_STATS[k] = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,37 +89,228 @@ class SolverConfig:
         b, m = select_backend(A, self.backend, self.method)
         return dataclasses.replace(self, backend=b, method=m)
 
-    def transposed_for(self, A: SparseTensor) -> "SolverConfig":
-        """Config for the adjoint solve Aᵀλ = g — same backend/method; the
-        paper reuses the forward backend (and factorization) for the adjoint."""
-        return self
+    def plan_key(self) -> Tuple[str, str, str]:
+        """Plan-cache key: only the fields the analyze stage depends on.
+        tol/atol/maxiter/restart steer the solve loop, not the symbolic
+        setup — a tolerance sweep reuses one plan."""
+        return (self.backend, self.method, self.precond)
 
 
-def register_backend(name: str, solve_fn: Callable, applicable: Callable):
-    _REGISTRY[name] = (solve_fn, applicable)
+# ---------------------------------------------------------------------------
+# kernel (matvec) selection — shared by backends and the public ``matvec``
+# ---------------------------------------------------------------------------
+
+def _select_kernel(A: SparseTensor, backend: Optional[str] = None) -> str:
+    if backend in (None, "auto"):
+        if A.stencil is not None:
+            return "stencil"
+        if A.bell is not None and jax.default_backend() == "tpu":
+            return "bell"
+        return "coo"
+    if backend == "stencil" and A.stencil is not None:
+        return "stencil"
+    if backend == "pallas" and A.bell is not None:
+        return "bell"
+    return "coo"
+
+
+def _kernel_fn(A: SparseTensor, kernel: str) -> Callable:
+    """Single-instance SpMV as a function of (val, x) — vmap-able."""
+    if kernel == "stencil" and A.stencil is not None:
+        from ..kernels import ops as kops
+        return partial(kops.stencil5_matvec, A.stencil)
+    if kernel == "bell" and A.bell is not None:
+        from ..kernels import ops as kops
+        meta, block_cols, perm = A.bell
+        n = A.shape[0]
+        return lambda v, x: kops.bell_matvec(meta, block_cols, perm, v, x, n)
+    row, col, n = A.row, A.col, A.shape[0]
+    return lambda v, x: coo_matvec(v, row, col, x, n)
+
+
+def make_matvec(A: SparseTensor, backend: Optional[str] = None) -> Callable:
+    """Closure ``x ↦ A @ x`` through the selected kernel (unbatched)."""
+    fn = _kernel_fn(A, _select_kernel(A, backend))
+    return lambda x: fn(A.val, x)
+
+
+def matvec(A: SparseTensor, x, backend: Optional[str] = None):
+    """A @ x — batched values and/or rhs route through the SAME selected
+    kernel via vmap (shared-pattern batching keeps the kernel layout)."""
+    kernel = _select_kernel(A, backend)
+    batched = bool(A.batch_shape) or (hasattr(x, "ndim") and x.ndim > 1)
+    if not batched:
+        return _kernel_fn(A, kernel)(A.val, x)
+    if kernel == "coo":
+        return coo_matvec(A.val, A.row, A.col, x, A.shape[0])
+    fn = _kernel_fn(A, kernel)
+    batch = jnp.broadcast_shapes(A.batch_shape, x.shape[:-1])
+    val = jnp.broadcast_to(A.val, batch + A.val.shape[-1:])
+    xx = jnp.broadcast_to(x, batch + x.shape[-1:])
+    y = jax.vmap(fn)(val.reshape((-1, val.shape[-1])),
+                     xx.reshape((-1, xx.shape[-1])))
+    return y.reshape(batch + (A.shape[0],))
+
+
+# ---------------------------------------------------------------------------
+# backend classes — each exposes the analyze/setup/solve stages
+# ---------------------------------------------------------------------------
+
+class Backend:
+    """A solver backend.  Subclasses implement the three plan stages.
+
+    ``analyze(cfg, pattern)`` — eager, values-free; returns the artifact dict
+    stored on the plan.  ``setup(plan, A)`` — traced-safe, values-dependent.
+    ``solve(plan, state, A, b, x0)`` — one un-differentiated solve.
+    """
+    name: str = "abstract"
+    methods: Tuple[str, ...] = ()
+    handles_batch = False       # True: backend does its own batch vmapping
+
+    def applicable(self, A: SparseTensor) -> bool:
+        return True
+
+    def default_method(self, A: SparseTensor) -> str:
+        sym = A.props.get("symmetric", False)
+        spd = A.props.get("spd_hint", False)
+        return "cg" if (spd or sym) else "bicgstab"
+
+    def analyze(self, cfg: SolverConfig, pattern) -> dict:
+        return {}
+
+    def setup(self, plan: "SolverPlan", A: SparseTensor):
+        return None
+
+    def solve(self, plan: "SolverPlan", state, A: SparseTensor, b, x0,
+              cfg: SolverConfig):
+        raise NotImplementedError
+
+
+class DenseBackend(Backend):
+    name = "dense"
+    methods = ("lu", "cholesky")
+
+    def applicable(self, A):
+        return A.shape[0] == A.shape[1]
+
+    def default_method(self, A):
+        return "cholesky" if A.props.get("spd_hint", False) else "lu"
+
+    def setup(self, plan, A):
+        return A.todense()
+
+    def solve(self, plan, dense, A, b, x0, cfg):
+        return _solvers.dense_solve(dense, b, cfg.method)
+
+
+class IterativeBackend(Backend):
+    """Shared machinery for Krylov backends: kernel matvec + preconditioner."""
+    kernel = "coo"
+    methods = ("cg", "bicgstab", "gmres")
+
+    def analyze(self, cfg, pattern):
+        return {"precond": _precond.PreconditionerPlan(
+            cfg.precond, pattern.row, pattern.col, pattern.shape,
+            stencil=pattern.stencil)}
+
+    def setup(self, plan, A):
+        fn = _kernel_fn(A, self.kernel)
+        mv = lambda x: fn(A.val, x)
+        M = plan.artifacts["precond"].refresh(A, mv)
+        return mv, M
+
+    def solve(self, plan, state, A, b, x0, cfg):
+        mv, M = state
+        if cfg.method == "cg":
+            return _solvers.cg(mv, b, x0, M=M, tol=cfg.tol, atol=cfg.atol,
+                               maxiter=cfg.maxiter)
+        if cfg.method == "bicgstab":
+            return _solvers.bicgstab(mv, b, x0, M=M, tol=cfg.tol,
+                                     atol=cfg.atol, maxiter=cfg.maxiter)
+        if cfg.method == "gmres":
+            return _solvers.gmres(mv, b, x0, M=M, tol=cfg.tol, atol=cfg.atol,
+                                  restart=cfg.restart,
+                                  maxiter=max(cfg.maxiter // cfg.restart, 1))
+        raise ValueError(
+            f"unknown method {cfg.method!r} for backend {cfg.backend!r}")
+
+
+class JnpBackend(IterativeBackend):
+    name = "jnp"
+    kernel = "coo"
+
+
+class PallasBackend(IterativeBackend):
+    name = "pallas"
+    kernel = "bell"
+
+    def applicable(self, A):
+        return A.bell is not None
+
+
+class StencilBackend(IterativeBackend):
+    name = "stencil"
+    kernel = "stencil"
+    methods = ("cg", "bicgstab")
+
+    def applicable(self, A):
+        return A.stencil is not None
+
+
+class _FnBackend(Backend):
+    """Adapter for legacy ``register_backend(name, solve_fn, applicable)``."""
+    handles_batch = True
+
+    def __init__(self, name, solve_fn, applicable):
+        self.name = name
+        self._solve_fn = solve_fn
+        self._applicable = applicable
+
+    def applicable(self, A):
+        return self._applicable(A)
+
+    def solve(self, plan, state, A, b, x0, cfg):
+        return self._solve_fn(cfg, A, b, x0)
+
+
+BACKENDS: Dict[str, Backend] = {
+    b.name: b for b in (DenseBackend(), JnpBackend(), PallasBackend(),
+                        StencilBackend())}
+
+
+def register_backend(name: str, solve_fn: Optional[Callable] = None,
+                     applicable: Optional[Callable] = None, *,
+                     backend: Optional[Backend] = None):
+    """Register a backend: either a :class:`Backend` instance (``backend=``)
+    or the legacy ``(solve_fn, applicable)`` function pair."""
+    if backend is not None:
+        backend.name = name
+        BACKENDS[name] = backend
+    else:
+        BACKENDS[name] = _FnBackend(name, solve_fn,
+                                    applicable or (lambda A: True))
 
 
 def select_backend(A: SparseTensor, backend: str, method: str):
-    """Device- and size-aware auto-dispatch (paper §3.1)."""
+    """Device- and size-aware auto-dispatch (paper §3.1 rules, TPU constants):
+    (i) honor explicit overrides; (ii) direct below the dense budget;
+    (iii) iterative above, preferring the Pallas/stencil SpMV when the tensor
+    carries that layout; CG when SPD-ish, BiCGStab otherwise."""
     n = A.shape[0]
-    sym = A.props.get("symmetric", False)
-    spd = A.props.get("spd_hint", False)
     platform = jax.default_backend()
-
     if backend == "auto":
         if A.stencil is not None:
             backend = "stencil"
-        elif n <= DENSE_BUDGET and not A.batch_shape:
+        elif n <= DENSE_BUDGET and not A.batch_shape and \
+                BACKENDS["dense"].applicable(A):
             backend = "dense"
         elif A.bell is not None and platform == "tpu":
             backend = "pallas"
         else:
             backend = "jnp"
     if method == "auto":
-        if backend == "dense":
-            method = "cholesky" if spd else "lu"
-        else:
-            method = "cg" if (spd or sym) else "bicgstab"
+        method = BACKENDS[backend].default_method(A) \
+            if backend in BACKENDS else "cg"
     return backend, method
 
 
@@ -99,75 +324,172 @@ def make_config(A: SparseTensor, *, backend=None, method=None, tol=1e-6,
 
 
 # ---------------------------------------------------------------------------
-# matvec selection
+# SolverPlan — the analyze(pattern) product
 # ---------------------------------------------------------------------------
 
-def make_matvec(A: SparseTensor, backend: Optional[str] = None) -> Callable:
-    backend = backend or ("stencil" if A.stencil is not None else
-                          ("pallas" if A.bell is not None and
-                           jax.default_backend() == "tpu" else "jnp"))
-    if backend == "stencil" and A.stencil is not None:
-        from ..kernels import ops as kops
-        return partial(kops.stencil5_matvec, A.stencil, A.val)
-    if backend == "pallas" and A.bell is not None:
-        from ..kernels import ops as kops
-        meta, block_cols, perm = A.bell
-        return lambda x: kops.bell_matvec(meta, block_cols, perm, A.val, x,
-                                          A.shape[0])
-    return lambda x: coo_matvec(A.val, A.row, A.col, x, A.shape[0])
+class SolverPlan:
+    """Reusable symbolic setup for one (sparsity pattern, SolverConfig).
+
+    Holds only pattern-level state — row/col indices, shape, detected
+    properties, kernel layouts, and the backend's analyze artifacts — never
+    values, so one plan serves every ``with_values`` refresh, every element
+    of a shared-pattern batch, and the adjoint solve of ``jax.grad``.
+    """
+
+    def __init__(self, cfg: SolverConfig, A: SparseTensor,
+                 cache: Optional[dict] = None):
+        if cfg.backend not in BACKENDS:
+            raise ValueError(f"unknown backend {cfg.backend!r}")
+        self.cfg = cfg              # first-seen config; solve-loop knobs
+        self.backend = BACKENDS[cfg.backend]   # (tol/maxiter) may be overridden per call
+        if self.backend.methods and cfg.method not in self.backend.methods:
+            raise ValueError(
+                f"method {cfg.method!r} not supported by backend "
+                f"{cfg.backend!r} (supported: {self.backend.methods})")
+        self.row, self.col = A.row, A.col
+        self.shape = tuple(A.shape)
+        self.props = dict(A.props)
+        self.bell = A.bell
+        self.stencil = A.stencil
+        self._cache = cache if cache is not None else {cfg.plan_key(): self}
+        self._tplan: Optional["SolverPlan"] = None
+        PLAN_STATS["analyze"] += 1
+        self.artifacts = self.backend.analyze(cfg, self)
+
+    # -- stage ❷: values-dependent setup (traced-safe) ----------------------
+    def setup(self, A: SparseTensor):
+        PLAN_STATS["setup"] += 1
+        return self.backend.setup(self, A)
+
+    # -- stage ❸: solve ------------------------------------------------------
+    def solve_single(self, A: SparseTensor, b, x0=None, state=None,
+                     cfg: Optional[SolverConfig] = None):
+        cfg = cfg if cfg is not None else self.cfg
+        state = self.setup(A) if state is None else state
+        return self.backend.solve(self, state, A, b, x0, cfg)
+
+    def solve(self, A: SparseTensor, b, x0=None,
+              cfg: Optional[SolverConfig] = None):
+        """One un-differentiated solve; shared-pattern batches are vmapped
+        here so the adjoint layer never needs to care.  ``cfg`` overrides the
+        solve-loop knobs (tol/atol/maxiter/restart) without re-analyzing."""
+        cfg = cfg if cfg is not None else self.cfg
+        if self.backend.handles_batch:
+            return self.backend.solve(self, self.setup(A), A, b, x0, cfg)
+        batch = jnp.broadcast_shapes(A.batch_shape, b.shape[:-1])
+        if batch:
+            val = jnp.broadcast_to(A.val, batch + A.val.shape[-1:])
+            bb = jnp.broadcast_to(b, batch + b.shape[-1:])
+            fv = val.reshape((-1, val.shape[-1]))
+            fb = bb.reshape((-1, bb.shape[-1]))
+
+            def one(v, rhs, xx0=None):
+                return self.solve_single(self.matrix(v), rhs, xx0, cfg=cfg)
+
+            if x0 is None:
+                xs, infos = jax.vmap(lambda v, rhs: one(v, rhs))(fv, fb)
+            else:
+                fx0 = jnp.broadcast_to(x0, batch + x0.shape[-1:]).reshape(fb.shape)
+                xs, infos = jax.vmap(one)(fv, fb, fx0)
+            return xs.reshape(batch + (b.shape[-1],)), infos
+        return self.solve_single(A, b, x0, cfg=cfg)
+
+    # -- pattern helpers -----------------------------------------------------
+    def matrix(self, val) -> SparseTensor:
+        """SparseTensor view of this plan's pattern carrying ``val`` —
+        shares the plan cache, so nested solves hit this plan."""
+        obj = SparseTensor.__new__(SparseTensor)
+        obj.val = val
+        obj.row, obj.col = self.row, self.col
+        obj.shape = self.shape
+        obj.props = dict(self.props)
+        obj.bell, obj.stencil = self.bell, self.stencil
+        obj._plans = self._cache
+        return obj
+
+    def transpose(self) -> "SolverPlan":
+        """Plan for the adjoint system Aᵀλ = g (paper §3.2.3).
+
+        Symmetric pattern → the SAME plan (layouts + preconditioner build
+        shared).  Otherwise a transposed sibling is analyzed once and cached
+        here; its block-ELL layout is rebuilt eagerly when the pattern is
+        concrete, and the stencil kernel (whose values encode A, not Aᵀ) is
+        dropped in favour of the COO path — matching the forward numerics.
+        """
+        if self._tplan is not None:
+            return self._tplan
+        n, m = self.shape
+        if n == m and self.props.get("symmetric", False):
+            PLAN_STATS["transpose_shared"] += 1
+            self._tplan = self
+            return self
+
+        tbell = None
+        if self.bell is not None and not isinstance(self.row, jax.core.Tracer):
+            tbell = build_bell(self.col, self.row, (m, n))
+        tcfg = self.cfg
+        if tcfg.backend == "stencil" or (tcfg.backend == "pallas" and
+                                         tbell is None):
+            tcfg = dataclasses.replace(tcfg, backend="jnp")
+            if tcfg.precond == "mg":   # V-cycle needs the dropped stencil view
+                tcfg = dataclasses.replace(tcfg, precond="jacobi")
+        At = SparseTensor.__new__(SparseTensor)
+        At.val = None
+        At.row, At.col = self.col, self.row
+        At.shape = (m, n)
+        At.props = dict(self.props)
+        At.bell, At.stencil = tbell, None
+        At._plans = {}
+        tplan = SolverPlan(tcfg, At, cache=At._plans)
+        At._plans[tcfg.plan_key()] = tplan
+        tplan._tplan = self       # (Aᵀ)ᵀ = A
+        self._tplan = tplan
+        return tplan
+
+    def adapt(self, cfg: SolverConfig) -> SolverConfig:
+        """Project a caller's config onto this plan's analyze-stage choices
+        (backend/method/precond), keeping the caller's solve-loop knobs —
+        used by the adjoint so tol/maxiter follow the forward request even
+        when the transpose plan rewrote the backend."""
+        return dataclasses.replace(cfg, backend=self.cfg.backend,
+                                   method=self.cfg.method,
+                                   precond=self.cfg.precond)
 
 
-def matvec(A: SparseTensor, x, backend: Optional[str] = None):
-    if A.batch_shape or (hasattr(x, "ndim") and x.ndim > 1):
-        return coo_matvec(A.val, A.row, A.col, x, A.shape[0])
-    return make_matvec(A, backend)(x)
+def get_plan(A: SparseTensor, cfg: Optional[SolverConfig] = None,
+             **kw) -> SolverPlan:
+    """Fetch (or analyze-and-cache) the plan for ``A``'s pattern + ``cfg``.
+
+    The cache lives on the SparseTensor and is SHARED by ``with_values``
+    views, so repeated solves on one pattern — including inside jit/grad —
+    analyze exactly once."""
+    if cfg is None:
+        cfg = make_config(A, **kw)
+    elif cfg.backend in (None, "auto") or cfg.method in (None, "auto"):
+        cfg = cfg.resolved(A)
+    cache = getattr(A, "_plans", None)
+    if cache is None:
+        cache = {}
+        try:
+            A._plans = cache
+        except AttributeError:
+            pass
+    key = cfg.plan_key()
+    plan = cache.get(key)
+    if plan is not None:
+        PLAN_STATS["cache_hit"] += 1
+        return plan
+    PLAN_STATS["cache_miss"] += 1
+    plan = SolverPlan(cfg, A, cache=cache)
+    cache[key] = plan
+    return plan
 
 
 # ---------------------------------------------------------------------------
-# the raw (non-differentiable) solve — called by the adjoint framework for
-# both the forward and the adjoint systems.
+# legacy free-function API (kept for callers/benchmarks; plan-backed now)
 # ---------------------------------------------------------------------------
 
 def solve_impl(cfg: SolverConfig, A: SparseTensor, b: jax.Array,
                x0: Optional[jax.Array] = None):
-    """One un-differentiated solve.  Batched values/rhs are vmapped here so
-    the adjoint layer never needs to care (shared-pattern batching)."""
-    if cfg.backend in _REGISTRY:
-        return _REGISTRY[cfg.backend][0](cfg, A, b, x0)
-
-    batch = jnp.broadcast_shapes(A.batch_shape, b.shape[:-1])
-    if batch:
-        val = jnp.broadcast_to(A.val, batch + A.val.shape[-1:])
-        bb = jnp.broadcast_to(b, batch + b.shape[-1:])
-        fv = val.reshape((-1, val.shape[-1]))
-        fb = bb.reshape((-1, bb.shape[-1]))
-        if x0 is not None:
-            fx0 = jnp.broadcast_to(x0, batch + x0.shape[-1:]).reshape(fb.shape)
-        def one(v, rhs, xx0=None):
-            Ai = A.with_values(v)
-            x, info = _solve_single(cfg, Ai, rhs, xx0)
-            return x, info
-        if x0 is None:
-            xs, infos = jax.vmap(lambda v, rhs: one(v, rhs))(fv, fb)
-        else:
-            xs, infos = jax.vmap(one)(fv, fb, fx0)
-        return xs.reshape(batch + (b.shape[-1],)), infos
-    return _solve_single(cfg, A, b, x0)
-
-
-def _solve_single(cfg: SolverConfig, A: SparseTensor, b, x0):
-    if cfg.backend == "dense":
-        return _solvers.dense_solve(A.todense(), b, cfg.method)
-    mv = make_matvec(A, cfg.backend)
-    M = _precond.make_preconditioner(cfg.precond, A, mv)
-    if cfg.method == "cg":
-        return _solvers.cg(mv, b, x0, M=M, tol=cfg.tol, atol=cfg.atol,
-                           maxiter=cfg.maxiter)
-    if cfg.method == "bicgstab":
-        return _solvers.bicgstab(mv, b, x0, M=M, tol=cfg.tol, atol=cfg.atol,
-                                 maxiter=cfg.maxiter)
-    if cfg.method == "gmres":
-        return _solvers.gmres(mv, b, x0, M=M, tol=cfg.tol, atol=cfg.atol,
-                              restart=cfg.restart,
-                              maxiter=max(cfg.maxiter // cfg.restart, 1))
-    raise ValueError(f"unknown method {cfg.method!r} for backend {cfg.backend!r}")
+    """One un-differentiated solve through the cached plan."""
+    return get_plan(A, cfg).solve(A, b, x0, cfg=cfg)

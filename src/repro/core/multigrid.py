@@ -9,11 +9,17 @@ weighted-Jacobi smoothing, full-weighting restriction of both residual and
 coefficient field, bilinear prolongation, dense coarse solve — usable as the
 ``M`` of any Krylov solver in this library (and TPU-friendly: shifts,
 pooling and small matmuls only; no triangular solves).
+
+It is also a first-class ``precond="mg"`` option of the solver-plan factory
+(:mod:`repro.core.precond`): the hierarchy *structure* (level sizes) is
+static per grid shape, while the per-level operators are rebuilt traced-safe
+from the current stencil values by :meth:`MultigridPreconditioner.from_planes`
+inside the plan's ``setup(values)`` stage.
 """
 from __future__ import annotations
 
 import functools
-from typing import List, Tuple
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -43,6 +49,37 @@ def _prolong(e):
     return jnp.repeat(jnp.repeat(e, 2, axis=0), 2, axis=1)
 
 
+def _build_levels(kappa: jax.Array, coarsest: int,
+                  fine_planes: Optional[jax.Array] = None
+                  ) -> Tuple[List[jax.Array], List[int]]:
+    """Level hierarchy by 2×2-averaging κ (rediscretization coarsening).
+
+    ``fine_planes``, when given, is used verbatim as the finest operator (so
+    the smoother sees the *actual* assembled matrix, not a rediscretization);
+    coarser levels always come from ``vc_coefficients`` of the restricted κ.
+    All ops are traced-safe; only level *sizes* (static, from shapes) steer
+    the Python loop.
+    """
+    levels: List[jax.Array] = []
+    sizes: List[int] = []
+    ng = kappa.shape[0]
+    k = kappa
+
+    def level_op(k, ng):
+        if fine_planes is not None and not levels:
+            return fine_planes
+        return vc_coefficients(k).reshape(5, ng, ng)
+
+    while ng >= coarsest and ng % 2 == 0:
+        levels.append(level_op(k, ng))
+        sizes.append(ng)
+        k = _restrict(k)
+        ng //= 2
+    levels.append(level_op(k, ng))
+    sizes.append(ng)
+    return levels, sizes
+
+
 class MultigridPreconditioner:
     """One V-cycle per application, built from a κ field (paper §4.4 operator).
 
@@ -51,22 +88,17 @@ class MultigridPreconditioner:
     are the same signed (5, n, n) planes the stencil kernel consumes.
     """
 
-    def __init__(self, kappa: jax.Array, *, coarsest: int = 16,
-                 pre_smooth: int = 2, post_smooth: int = 2,
-                 omega: float = 0.8):
-        ng = kappa.shape[0]
+    def __init__(self, kappa: Optional[jax.Array] = None, *,
+                 coarsest: int = 16, pre_smooth: int = 2,
+                 post_smooth: int = 2, omega: float = 0.8,
+                 _levels: Optional[List[jax.Array]] = None,
+                 _sizes: Optional[List[int]] = None):
         self.pre, self.post, self.omega = pre_smooth, post_smooth, omega
-        self.levels: List[jax.Array] = []
-        self.sizes: List[int] = []
-        k = kappa
-        while ng >= coarsest and ng % 2 == 0:
-            self.levels.append(vc_coefficients(k).reshape(5, ng, ng))
-            self.sizes.append(ng)
-            k = _restrict(k)
-            ng //= 2
-        self.levels.append(vc_coefficients(k).reshape(5, ng, ng))
-        self.sizes.append(ng)
-        # dense coarse operator (assembled once)
+        if _levels is None:
+            _levels, _sizes = _build_levels(kappa, coarsest)
+        self.levels, self.sizes = _levels, _sizes
+        # dense coarse operator (assembled once per setup; traced-safe)
+        ng = self.sizes[-1]
         nc = ng * ng
         eye = jnp.eye(nc).reshape(nc, ng, ng)
         Ac = jax.vmap(lambda col: stencil5_ref(self.levels[-1], col))(eye)
@@ -75,6 +107,22 @@ class MultigridPreconditioner:
         # 2×-coarser grid — the restricted residual needs a 4× factor to
         # keep the two-grid correction consistent (h² scaling of the stencil)
         self.scale = 4.0
+
+    @classmethod
+    def from_planes(cls, v5: jax.Array, *, coarsest: int = 16,
+                    **kw) -> "MultigridPreconditioner":
+        """Build from assembled (5, ng, ng) stencil planes (traced-safe).
+
+        Recovers a κ proxy from the centre plane (C = ΣkN,kS,kW,kE ≈ 4κ for
+        the variable-coefficient Poisson family), keeps the given planes as
+        the finest operator, and rediscretizes the restricted proxy below.
+        This is the ``precond="mg"`` entry point of the plan factory.
+        """
+        if v5.ndim != 3 or v5.shape[0] != 5 or v5.shape[1] != v5.shape[2]:
+            raise ValueError(f"from_planes expects (5, ng, ng), got {v5.shape}")
+        kappa_proxy = v5[0] / 4.0
+        levels, sizes = _build_levels(kappa_proxy, coarsest, fine_planes=v5)
+        return cls(_levels=levels, _sizes=sizes, **kw)
 
     def _vcycle(self, level: int, b):
         v5 = self.levels[level]

@@ -1,20 +1,41 @@
-"""Preconditioners.
+"""Preconditioners, split into eager ``build(pattern)`` + traced ``refresh(values)``.
 
 The paper's pytorch-native backend supports only Jacobi (its stated
-limitation, §5).  We reproduce Jacobi faithfully and add two *beyond-paper*
+limitation, §5).  We reproduce Jacobi faithfully and add three *beyond-paper*
 matvec-only preconditioners that suit TPU (no scalar triangular solves):
-block-Jacobi (dense MXU-sized diagonal blocks) and Chebyshev polynomial.
+block-Jacobi (dense MXU-sized diagonal blocks), Chebyshev polynomial, and a
+geometric multigrid V-cycle (``precond="mg"``, stencil operators only).
+
+Plan protocol (used by :class:`repro.core.dispatch.SolverPlan`):
+
+* :class:`PreconditionerPlan` — constructed once per sparsity pattern by the
+  backend's ``analyze`` stage.  Everything that only depends on the *pattern*
+  (diagonal-block membership, scatter indices, level sizes) is computed here,
+  eagerly, with numpy when the pattern is concrete.
+* ``PreconditionerPlan.refresh(A, matvec)`` — called by the ``setup(values)``
+  stage with the current (possibly traced) values.  Only traced-safe jnp ops
+  run here, so the same plan works under ``jit``/``grad``/``vmap`` and is
+  shared by the forward and adjoint solves.
+
+The legacy functional constructors (``jacobi``, ``block_jacobi``,
+``chebyshev``) remain for direct use and are themselves traced-safe now.
 """
 from __future__ import annotations
 
 from functools import partial
-from typing import Callable
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["identity", "jacobi", "block_jacobi", "chebyshev", "make_preconditioner"]
+__all__ = [
+    "identity", "jacobi", "block_jacobi", "chebyshev",
+    "PreconditionerPlan", "make_preconditioner",
+]
+
+PRECONDITIONERS = ("none", "identity", "jacobi", "block_jacobi", "chebyshev",
+                   "mg")
 
 
 def identity():
@@ -27,31 +48,44 @@ def jacobi(diag: jax.Array, eps: float = 1e-30):
     return lambda r: inv * r
 
 
-def block_jacobi(val, row, col, n: int, block: int = 128):
-    """Dense-block diagonal inverse.  Blocks are MXU-aligned (default 128):
-    extraction is eager (concrete pattern), application is one batched matmul.
-    Beyond-paper: no TPU-hostile triangular solves, still much stronger than
-    point Jacobi on PDE matrices."""
-    nb = -(-n // block)
-    r = np.asarray(row); c = np.asarray(col); v = np.asarray(val)
-    blocks = np.zeros((nb, block, block), v.dtype)
-    same = (r // block) == (c // block)
-    rb = r[same] // block
-    blocks[rb, r[same] % block, c[same] % block] = v[same]
-    # regularize empty tail rows of the padded final block
-    for b_ in range(nb):
-        d = np.abs(np.diag(blocks[b_]))
-        fix = d < 1e-12
-        blocks[b_][np.where(fix)[0], np.where(fix)[0]] = 1.0
-    inv = jnp.asarray(np.linalg.inv(blocks))
+def _bj_indices(row, col, block: int):
+    """(scatter target, in-diagonal-block mask) for COO entries — the
+    pattern-only half of block-Jacobi.  Works on numpy or jnp index arrays."""
+    rb = row // block
+    same = rb == (col // block)
+    flat = (rb * block + row % block) * block + col % block
+    return jnp.where(same, flat, 0), same
 
+
+def _bj_assemble(val, safe, same, nb: int, block: int):
+    """Scatter diagonal-block entries into (nb, B, B) — traced-safe (the
+    off-block entries scatter an explicit zero into slot 0)."""
+    contrib = jnp.where(same, val, jnp.zeros_like(val))
+    blocks = jnp.zeros((nb * block * block,), val.dtype).at[safe].add(contrib)
+    blocks = blocks.reshape(nb, block, block)
+    # regularize structurally-empty diagonal slots (padded tail rows)
+    ar = jnp.arange(block)
+    d = blocks[:, ar, ar]
+    return blocks.at[:, ar, ar].set(jnp.where(jnp.abs(d) < 1e-12, 1.0, d))
+
+
+def _bj_apply(inv, n: int, nb: int, block: int):
     def apply(rvec):
-        pad = nb * block - n
-        rp = jnp.pad(rvec, (0, pad)).reshape(nb, block)
+        rp = jnp.pad(rvec, (0, nb * block - n)).reshape(nb, block)
         out = jnp.einsum("bij,bj->bi", inv, rp).reshape(nb * block)
         return out[:n]
-
     return apply
+
+
+def block_jacobi(val, row, col, n: int, block: int = 128):
+    """Dense-block diagonal inverse.  Blocks are MXU-aligned (default 128):
+    application is one batched matmul.  Beyond-paper: no TPU-hostile
+    triangular solves, still much stronger than point Jacobi on PDE matrices.
+    Traced-safe — works on tracer ``val`` inside jit/grad."""
+    nb = -(-n // block)
+    safe, same = _bj_indices(row, col, block)
+    inv = jnp.linalg.inv(_bj_assemble(val, safe, same, nb, block))
+    return _bj_apply(inv, n, nb, block)
 
 
 def chebyshev(matvec: Callable, lam_min: float, lam_max: float, degree: int = 8):
@@ -82,7 +116,10 @@ def chebyshev(matvec: Callable, lam_min: float, lam_max: float, degree: int = 8)
 
 def estimate_spectrum(matvec: Callable, n: int, dtype=jnp.float32,
                       steps: int = 16, seed: int = 0):
-    """Lanczos-based extremal eigenvalue estimate for Chebyshev bounds."""
+    """Lanczos-based extremal eigenvalue estimate for Chebyshev bounds.
+
+    Traced-safe (pure jnp) — runs once per ``setup(values)``, not per solve.
+    """
     from .solvers import lanczos
     v0 = jax.random.normal(jax.random.PRNGKey(seed), (n,), dtype)
     a, b_, _ = lanczos(matvec, v0, steps)
@@ -91,16 +128,77 @@ def estimate_spectrum(matvec: Callable, n: int, dtype=jnp.float32,
     return w[0], w[-1]
 
 
+# ---------------------------------------------------------------------------
+# plan protocol: build(pattern) eager / refresh(values) traced
+# ---------------------------------------------------------------------------
+
+class PreconditionerPlan:
+    """Pattern-level preconditioner state, reusable across values refreshes.
+
+    ``__init__`` is the eager ``build(pattern)`` stage: it validates the
+    choice against the pattern and precomputes every values-independent
+    artifact.  ``refresh`` is the traced ``setup(values)`` stage returning the
+    apply closure consumed by the Krylov loops.
+    """
+
+    def __init__(self, name: Optional[str], row, col, shape, *,
+                 stencil=None, block: int = 128, degree: int = 8):
+        self.name = "none" if name in (None, "none", "identity") else name
+        if self.name not in PRECONDITIONERS:
+            raise ValueError(f"unknown preconditioner {name!r}")
+        self.row, self.col = row, col
+        self.shape = tuple(shape)
+        self.stencil = stencil
+        self.block = block
+        self.degree = degree
+        if self.name == "mg":
+            if stencil is None:
+                raise ValueError(
+                    "precond='mg' needs a stencil-layout SparseTensor "
+                    "(structured-grid operator)")
+            if stencil.nx != stencil.ny:
+                raise ValueError("precond='mg' requires a square grid")
+        if self.name == "block_jacobi":
+            # eager pattern part: diagonal-block membership + scatter targets
+            self.nb = -(-self.shape[0] // block)
+            try:
+                r = np.asarray(row).astype(np.int64)
+                c = np.asarray(col).astype(np.int64)
+            except Exception:  # traced pattern — fall back to jnp in refresh
+                self._bj_idx = None
+            else:
+                self._bj_idx = _bj_indices(r, c, block)
+
+    def refresh(self, A, matvec: Callable) -> Callable:
+        """values-dependent stage — traced-safe; one call per solver setup."""
+        if self.name == "none":
+            return identity()
+        if self.name == "jacobi":
+            return jacobi(A.diagonal())
+        if self.name == "block_jacobi":
+            n, block = self.shape[0], self.block
+            if self._bj_idx is None:      # traced pattern: derive per refresh
+                return block_jacobi(A.val, A.row, A.col, n, block)
+            safe, same = self._bj_idx
+            inv = jnp.linalg.inv(_bj_assemble(A.val, safe, same, self.nb, block))
+            return _bj_apply(inv, n, self.nb, block)
+        if self.name == "chebyshev":
+            lmin, lmax = estimate_spectrum(matvec, self.shape[0], A.dtype)
+            lmin = jnp.maximum(lmin, lmax * 1e-4)
+            return chebyshev(matvec, lmin, lmax, degree=self.degree)
+        if self.name == "mg":
+            from .multigrid import MultigridPreconditioner
+            nx, ny = self.stencil.nx, self.stencil.ny
+            v5 = A.val.reshape(5, nx, ny)
+            return MultigridPreconditioner.from_planes(v5)
+        raise ValueError(f"unknown preconditioner {self.name!r}")
+
+
 def make_preconditioner(name: str, A, matvec: Callable):
-    """Factory used by dispatch: name ∈ {none, jacobi, block_jacobi, chebyshev}."""
-    if name in (None, "none", "identity"):
-        return identity()
-    if name == "jacobi":
-        return jacobi(A.diagonal())
-    if name == "block_jacobi":
-        return block_jacobi(A.val, A.row, A.col, A.shape[0])
-    if name == "chebyshev":
-        lmin, lmax = estimate_spectrum(matvec, A.shape[0], A.dtype)
-        lmin = jnp.maximum(lmin, lmax * 1e-4)
-        return chebyshev(matvec, lmin, lmax, degree=8)
-    raise ValueError(f"unknown preconditioner {name!r}")
+    """One-shot factory: build(pattern) + refresh(values) in one call.
+
+    Name ∈ {none, jacobi, block_jacobi, chebyshev, mg}.  Prefer going through
+    a :class:`~repro.core.dispatch.SolverPlan` so the build stage is cached.
+    """
+    plan = PreconditionerPlan(name, A.row, A.col, A.shape, stencil=A.stencil)
+    return plan.refresh(A, matvec)

@@ -215,6 +215,7 @@ class SparseTensor:
         self.props = props if props is not None else detect_properties(
             val, self.row, self.col, self.shape)
         self.stencil = stencil
+        self._plans = {}    # SolverConfig → SolverPlan (pattern-keyed cache)
         if bell is not None:
             self.bell = bell
         elif build_kernel_layout:
@@ -240,6 +241,7 @@ class SparseTensor:
         obj.props = dict(props)
         obj.stencil = stencil
         obj.bell = (bell_meta,) + tuple(children[3:]) if bell_meta is not None else None
+        obj._plans = {}
         return obj
 
     # -- basic ops ----------------------------------------------------------
@@ -266,11 +268,14 @@ class SparseTensor:
                             props=self.props, validate=False)
 
     def with_values(self, val) -> "SparseTensor":
-        """Same pattern, new (possibly traced) values."""
+        """Same pattern, new (possibly traced) values.  The plan cache is
+        SHARED with the parent — the jit/grad hot path re-solves without
+        re-analyzing (paper §3.2.3: one symbolic setup per pattern)."""
         obj = SparseTensor.__new__(SparseTensor)
         obj.val, obj.row, obj.col = val, self.row, self.col
         obj.shape, obj.props = self.shape, dict(self.props)
         obj.bell, obj.stencil = self.bell, self.stencil
+        obj._plans = self._plans
         return obj
 
     def matvec(self, x, *, backend: Optional[str] = None):
@@ -290,6 +295,13 @@ class SparseTensor:
         return coo_diagonal(self.val, self.row, self.col, self.shape[0])
 
     # -- solvers (autograd-aware; see core/adjoint.py) ----------------------
+    def plan(self, **solve_kwargs):
+        """Analyze (or fetch the cached) :class:`~repro.core.dispatch.SolverPlan`
+        for this pattern + solver options — the analyze stage of
+        analyze → setup → solve."""
+        from . import dispatch
+        return dispatch.get_plan(self, dispatch.make_config(self, **solve_kwargs))
+
     def solve(self, b, *, backend: Optional[str] = None,
               method: Optional[str] = None, tol: float = 1e-6,
               atol: float = 0.0, maxiter: Optional[int] = None,

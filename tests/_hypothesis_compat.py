@@ -1,0 +1,72 @@
+"""Fallback property-testing shim for environments without ``hypothesis``.
+
+Import sites do::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_compat import given, settings, st
+
+When hypothesis is missing, ``@given`` degrades to a deterministic sweep of a
+few seeded samples per strategy — far weaker than real shrinking/coverage,
+but the property tests still collect and run on a bare environment instead of
+erroring the whole suite.  Only the strategy surface this repo uses is
+implemented (integers, floats, sampled_from, booleans, keyword-style given).
+"""
+from __future__ import annotations
+
+import random
+
+_FALLBACK_EXAMPLES = 5
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self.sample = sample
+
+
+class st:
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value, max_value):
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(lambda rng: rng.choice(elements))
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: rng.random() < 0.5)
+
+
+def settings(max_examples=_FALLBACK_EXAMPLES, **_ignored):
+    """No-op stand-in: records a (capped) example budget on the test."""
+    def deco(fn):
+        fn._max_examples = min(max_examples, _FALLBACK_EXAMPLES)
+        return fn
+    return deco
+
+
+def given(**strategies):
+    """Keyword-argument ``@given``: runs the test body over seeded draws.
+
+    The wrapper deliberately exposes a ZERO-argument signature (no
+    ``functools.wraps``/``__wrapped__``) so pytest does not mistake the
+    strategy parameters for fixtures."""
+    def deco(fn):
+        def wrapper():
+            n = getattr(wrapper, "_max_examples", _FALLBACK_EXAMPLES)
+            rng = random.Random(0)
+            for _ in range(n):
+                draw = {k: s.sample(rng) for k, s in strategies.items()}
+                fn(**draw)
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+    return deco

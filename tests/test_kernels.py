@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:       # bare env: seeded-sweep fallback, suite still collects
+    from _hypothesis_compat import given, settings, st
 
 from repro.core.sparse import build_bell, coo_matvec
 from repro.kernels import ops

@@ -1,0 +1,300 @@
+"""Plan-cached solver engine (paper §3.2.3: one symbolic setup per pattern).
+
+Proves the analyze(pattern) → setup(values) → solve(b) split is actually
+reused: ``with_values`` re-solves and ``jax.grad`` backward passes perform
+zero additional pattern analyses, the adjoint shares (symmetric) or caches
+(non-symmetric) the transpose plan, and the values-dependent preconditioner
+refreshes are traced-safe under jit/grad.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (SparseTensor, PLAN_STATS, get_plan, make_config,
+                        reset_plan_stats)
+from repro.core import dispatch
+from repro.data.poisson import poisson1d, poisson2d, poisson2d_vc
+
+
+@pytest.fixture()
+def A():
+    return poisson2d(8)     # 64 dof, SPD
+
+
+def _convection_diffusion(n, c=0.3):
+    A1 = poisson1d(n)
+    val = np.asarray(A1.val).copy()
+    val[np.asarray(A1.col) == np.asarray(A1.row) - 1] = -1.0 - c
+    val[np.asarray(A1.col) == np.asarray(A1.row) + 1] = -1.0 + c
+    return SparseTensor(val, A1.row, A1.col, (n, n))
+
+
+# ---------------------------------------------------------------------------
+# plan-cache observability (the tentpole's acceptance criterion)
+# ---------------------------------------------------------------------------
+
+def test_with_values_solves_analyze_once(A):
+    b = jnp.ones(A.shape[0])
+    reset_plan_stats()
+    A.solve(b, backend="jnp", method="cg", tol=1e-12)
+    A.with_values(A.val * 2.0).solve(b, backend="jnp", method="cg", tol=1e-12)
+    A.with_values(A.val * 0.5).solve(b, backend="jnp", method="cg", tol=1e-12)
+    assert PLAN_STATS["analyze"] == 1, PLAN_STATS
+    assert PLAN_STATS["cache_hit"] == 2, PLAN_STATS
+    # values-dependent setup still ran per solve
+    assert PLAN_STATS["setup"] == 3, PLAN_STATS
+
+
+def test_grad_adds_zero_analyzes_symmetric(A):
+    """Backward pass reuses the forward plan's transpose view (same object)."""
+    b = jnp.ones(A.shape[0])
+
+    def loss(val):
+        x = A.with_values(val).solve(b, backend="jnp", method="cg", tol=1e-13)
+        return jnp.sum(x ** 2)
+
+    reset_plan_stats()
+    jax.grad(loss)(A.val)
+    assert PLAN_STATS["analyze"] == 1, PLAN_STATS
+    assert PLAN_STATS["transpose_shared"] == 1, PLAN_STATS
+
+
+def test_grad_transpose_plan_cached_nonsymmetric():
+    """Non-symmetric: the transposed sibling is analyzed once, then cached."""
+    B = _convection_diffusion(40)
+    assert not B.props["symmetric"]
+    b = jnp.ones(40)
+
+    def loss(val):
+        x = B.with_values(val).solve(b, backend="jnp", method="bicgstab",
+                                     tol=1e-13, maxiter=4000)
+        return jnp.sum(x ** 2)
+
+    reset_plan_stats()
+    jax.grad(loss)(B.val)
+    first = PLAN_STATS["analyze"]
+    assert first == 2, PLAN_STATS       # forward plan + transpose plan
+    jax.grad(loss)(B.val * 1.5)
+    assert PLAN_STATS["analyze"] == first, PLAN_STATS   # fully cached now
+
+
+def test_batched_shared_pattern_single_analysis(A):
+    vals = jnp.stack([A.val, 2.0 * A.val, 0.5 * A.val])
+    Ab = SparseTensor(vals, A.row, A.col, A.shape, props=A.props)
+    bs = jnp.ones((3, A.shape[0]))
+    reset_plan_stats()
+    xs = Ab.solve(bs, backend="jnp", method="cg", tol=1e-12)
+    assert PLAN_STATS["analyze"] == 1, PLAN_STATS
+    for i, s in enumerate((1.0, 2.0, 0.5)):
+        r = A.with_values(A.val * s) @ xs[i] - bs[i]
+        assert float(jnp.linalg.norm(r)) < 1e-8
+
+
+def test_tolerance_sweep_shares_one_plan(A):
+    """tol/atol/maxiter are solve-loop knobs, not part of the plan key."""
+    b = jnp.ones(A.shape[0])
+    reset_plan_stats()
+    for tol in (1e-4, 1e-8, 1e-12):
+        A.solve(b, backend="jnp", method="cg", tol=tol)
+    assert PLAN_STATS["analyze"] == 1, PLAN_STATS
+    assert PLAN_STATS["cache_hit"] == 2, PLAN_STATS
+    # and the tighter tolerance was actually honored, not the cached one
+    x = A.solve(b, backend="jnp", method="cg", tol=1e-12)
+    assert float(jnp.linalg.norm(A @ x - b)) < 1e-9
+
+
+def test_grad_nonsymmetric_stencil_mg_falls_back():
+    """Backward of a non-symmetric stencil-layout solve with precond='mg':
+    the transpose plan drops the stencil view, so mg must degrade to a
+    COO-compatible preconditioner instead of raising."""
+    from repro.data.poisson import vc_pattern, vc_coefficients
+    ng = 8
+    rows, cols, meta = vc_pattern(ng)
+    kappa = jnp.ones((ng, ng))
+    val = vc_coefficients(kappa).reshape(5, ng, ng)
+    val = val.at[1].mul(1.3).at[2].mul(0.7).reshape(-1)   # break symmetry
+    B = SparseTensor(val, rows, cols, (ng * ng, ng * ng),
+                     props={"symmetric": False, "spd_hint": False},
+                     stencil=meta, validate=False)
+    b = jnp.ones(B.shape[0])
+
+    def loss(v):
+        x = B.with_values(v).solve(b, method="bicgstab", tol=1e-13,
+                                   maxiter=8000, precond="mg")
+        return jnp.sum(x ** 2)
+
+    def loss_dense(v):
+        return jnp.sum(jnp.linalg.solve(B.with_values(v).todense(), b) ** 2)
+
+    g = jax.grad(loss)(B.val)
+    gd = jax.grad(loss_dense)(B.val)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(gd),
+                               rtol=1e-6, atol=1e-8)
+
+
+def test_plan_api_stages(A):
+    """analyze → setup → solve stages are individually addressable."""
+    plan = A.plan(backend="jnp", method="cg", tol=1e-12)
+    assert plan is A.plan(backend="jnp", method="cg", tol=1e-12)  # cached
+    state = plan.setup(A)
+    x, info = plan.solve_single(A, jnp.ones(A.shape[0]), state=state)
+    assert bool(info.converged)
+    assert plan.transpose() is plan     # symmetric pattern
+
+
+# ---------------------------------------------------------------------------
+# gradients: forward-vs-adjoint plan reuse must not change the math
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend,method", [("jnp", "cg"), ("dense", "lu"),
+                                            ("dense", "cholesky")])
+def test_gradcheck_symmetric_matches_dense_autodiff(A, backend, method):
+    rng = np.random.default_rng(0)
+    b = jnp.asarray(rng.normal(size=A.shape[0]))
+
+    def loss(val, rhs):
+        x = A.with_values(val).solve(rhs, backend=backend, method=method,
+                                     tol=1e-13, maxiter=8000)
+        return jnp.sum(x ** 2)
+
+    def loss_dense(val, rhs):
+        return jnp.sum(jnp.linalg.solve(A.with_values(val).todense(), rhs) ** 2)
+
+    g = jax.grad(loss, (0, 1))(A.val, b)
+    gd = jax.grad(loss_dense, (0, 1))(A.val, b)
+    np.testing.assert_allclose(np.asarray(g[0]), np.asarray(gd[0]),
+                               rtol=1e-6, atol=1e-8)
+    np.testing.assert_allclose(np.asarray(g[1]), np.asarray(gd[1]),
+                               rtol=1e-6, atol=1e-8)
+
+
+@pytest.mark.parametrize("backend,method", [("jnp", "bicgstab"), ("dense", "lu")])
+def test_gradcheck_nonsymmetric_matches_dense_autodiff(backend, method):
+    B = _convection_diffusion(48, c=0.4)
+    rng = np.random.default_rng(1)
+    b = jnp.asarray(rng.normal(size=48))
+
+    def loss(val, rhs):
+        x = B.with_values(val).solve(rhs, backend=backend, method=method,
+                                     tol=1e-13, maxiter=8000)
+        return jnp.sum(x ** 3)
+
+    def loss_dense(val, rhs):
+        return jnp.sum(jnp.linalg.solve(B.with_values(val).todense(), rhs) ** 3)
+
+    g = jax.grad(loss, (0, 1))(B.val, b)
+    gd = jax.grad(loss_dense, (0, 1))(B.val, b)
+    np.testing.assert_allclose(np.asarray(g[0]), np.asarray(gd[0]),
+                               rtol=1e-6, atol=1e-8)
+    np.testing.assert_allclose(np.asarray(g[1]), np.asarray(gd[1]),
+                               rtol=1e-6, atol=1e-8)
+
+
+# ---------------------------------------------------------------------------
+# preconditioner plans: traced-safe refresh (regression for the jit crash)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("precond", ["block_jacobi", "chebyshev"])
+def test_preconditioned_solve_differentiable(precond):
+    """block_jacobi used to call np.asarray on tracers; chebyshev re-ran the
+    Lanczos bound inside every solve.  Both now refresh inside setup(values)
+    and work under jit + grad."""
+    A = poisson2d(12)
+    b = jnp.ones(A.shape[0])
+
+    def loss(val):
+        x = A.with_values(val).solve(b, backend="jnp", method="cg",
+                                     tol=1e-13, precond=precond)
+        return jnp.sum(x ** 2)
+
+    def loss_dense(val):
+        return jnp.sum(jnp.linalg.solve(A.with_values(val).todense(), b) ** 2)
+
+    g = jax.jit(jax.grad(loss))(A.val)
+    gd = jax.grad(loss_dense)(A.val)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(gd),
+                               rtol=1e-6, atol=1e-8)
+
+
+def test_mg_first_class_precond_option():
+    """precond='mg' builds the V-cycle from the stencil planes inside setup."""
+    xs = jnp.linspace(0, 1, 32)
+    X, Y = jnp.meshgrid(xs, xs, indexing="ij")
+    kappa = 1.0 + 0.5 * jnp.sin(2 * jnp.pi * X) * jnp.sin(2 * jnp.pi * Y)
+    A = poisson2d_vc(kappa, use_stencil_kernel=True)
+    b = jnp.ones(A.shape[0])
+    x = A.solve(b, method="cg", tol=1e-10, precond="mg", maxiter=200)
+    assert float(jnp.linalg.norm(A @ x - b)) < 1e-7
+    cfg = make_config(A, method="cg", tol=1e-10, precond="mg", maxiter=200)
+    assert cfg.backend == "stencil"     # auto-dispatch kept the kernel
+
+
+def test_mg_precond_requires_stencil():
+    A = poisson2d(8)
+    with pytest.raises(ValueError, match="mg"):
+        A.solve(jnp.ones(A.shape[0]), backend="jnp", precond="mg")
+
+
+# ---------------------------------------------------------------------------
+# batched matvec kernel routing (regression: used to silently fall to COO)
+# ---------------------------------------------------------------------------
+
+def test_batched_matvec_routes_through_stencil_kernel(monkeypatch):
+    xs = jnp.linspace(0, 1, 16)
+    X, Y = jnp.meshgrid(xs, xs, indexing="ij")
+    kappa = 1.0 + 0.3 * jnp.cos(2 * jnp.pi * X) * jnp.cos(2 * jnp.pi * Y)
+    A = poisson2d_vc(kappa, use_stencil_kernel=True)
+    import repro.kernels.ops as kops
+    calls = {"n": 0}
+    orig = kops.stencil5_matvec
+
+    def counting(*args, **kw):
+        calls["n"] += 1
+        return orig(*args, **kw)
+
+    monkeypatch.setattr(kops, "stencil5_matvec", counting)
+    rng = np.random.default_rng(0)
+    xb = jnp.asarray(rng.normal(size=(3, A.shape[0])))
+    y = A @ xb
+    assert calls["n"] > 0, "batched matvec bypassed the stencil kernel"
+    dense = np.asarray(A.todense())
+    np.testing.assert_allclose(np.asarray(y), np.asarray(xb) @ dense.T,
+                               rtol=1e-10, atol=1e-10)
+
+
+# ---------------------------------------------------------------------------
+# gmres residual carry (regression: 2 extra matvecs per restart cycle)
+# ---------------------------------------------------------------------------
+
+def test_gmres_reports_true_carried_residual():
+    from repro.core import solvers
+    B = _convection_diffusion(60, c=0.4)
+    rng = np.random.default_rng(2)
+    b = jnp.asarray(rng.normal(size=60))
+    mv = lambda v: B @ v
+    x, info = solvers.gmres(mv, b, tol=1e-10, restart=20, maxiter=100)
+    assert bool(info.converged)
+    true_rn = float(jnp.linalg.norm(mv(x) - b))
+    np.testing.assert_allclose(float(info.resnorm), true_rn, rtol=1e-10)
+
+
+def test_gmres_matvec_count_per_cycle():
+    """Trace-level matvec count: restart(m) Arnoldi steps + ONE residual
+    update per cycle — the convergence check rides on the carried residual."""
+    from repro.core import solvers
+    B = _convection_diffusion(40)
+    b = jnp.ones(40)
+    calls = {"n": 0}
+
+    def mv(v):
+        calls["n"] += 1
+        return B @ v
+
+    m = 10
+    jax.make_jaxpr(lambda rhs: solvers.gmres(mv, rhs, tol=1e-10, restart=m,
+                                             maxiter=50)[0])(b)
+    # trace-level count: init residual (1) + cond (0 — carried norm) +
+    # body (1 scan-traced Arnoldi step + 1 residual update) = 3.  The old
+    # loop re-derived the residual in cond and at exit → 5 traced matvecs.
+    assert calls["n"] <= 3, calls["n"]

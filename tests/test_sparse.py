@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:       # bare env: seeded-sweep fallback, suite still collects
+    from _hypothesis_compat import given, settings, st
 
 from repro.core import SparseTensor, SparseTensorList, build_bell, coo_matvec
 from repro.data.poisson import poisson1d, poisson2d
