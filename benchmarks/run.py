@@ -1,10 +1,15 @@
 """Benchmark harness — one module per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--full] [--only table3,fig2,...]
+                                            [--json BENCH.json]
 
 Prints ``name,us_per_call,derived`` CSV rows (the harness contract).
+``--json`` additionally writes the rows as structured JSON (the CI
+bench-smoke artifact).  A suite that raises still lets the others run, but
+the process exits nonzero so CI goes red on any benchmark failure.
 """
 import argparse
+import json
 import sys
 import traceback
 
@@ -17,8 +22,12 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper-scale sizes (slower)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized subset of each suite (minutes, not tens)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: table3,table4,fig2,table5,fig3")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows + failure count as JSON")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -26,7 +35,8 @@ def main() -> None:
     suites = []
     if only is None or "table3" in only:
         from . import table3_single_device
-        suites.append(("table3", lambda: table3_single_device.run(args.full)))
+        suites.append(("table3", lambda: table3_single_device.run(
+            args.full, smoke=args.smoke)))
     if only is None or "table4" in only:
         from . import table4_distributed
         suites.append(("table4", table4_distributed.run))
@@ -41,17 +51,29 @@ def main() -> None:
         steps = 1500 if args.full else 300
         suites.append(("fig3", lambda: fig3_inverse.run(steps=steps)))
 
-    failures = 0
+    rows, errors = [], []
     for name, fn in suites:
         try:
             for row in fn():
+                rows.append(row)
                 print(row, flush=True)
-        except Exception as e:  # report but continue
-            failures += 1
+        except Exception as e:  # report, keep the remaining suites running
+            errors.append(f"{name}: {type(e).__name__}: {e}")
             print(f"{name}/ERROR,0,{type(e).__name__}: {e}", flush=True)
             traceback.print_exc(file=sys.stderr)
-    if failures:
-        raise SystemExit(1)
+
+    if args.json:
+        def parse(row: str) -> dict:
+            name, us, derived = row.split(",", 2)
+            return {"name": name, "us_per_call": float(us), "derived": derived}
+
+        with open(args.json, "w") as f:
+            json.dump({"rows": [parse(r) for r in rows],
+                       "failures": len(errors), "errors": errors}, f, indent=1)
+
+    # a failed suite MUST surface as a nonzero exit code — the CI bench job
+    # gates on it (a swallowed traceback used to leave the job green)
+    sys.exit(1 if errors else 0)
 
 
 if __name__ == "__main__":

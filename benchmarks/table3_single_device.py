@@ -4,18 +4,21 @@ The paper's ladder (10K → 169M DOF, H200, f64) becomes a CPU-scaled ladder;
 the *dispatch behaviour* is what is reproduced: direct backends win small,
 iterative CG scales with O(nnz) memory, and the crossover matches the
 auto-dispatch policy constants.  Columns: backend time, peak-memory estimate,
-final residual — mirroring the paper's layout.
+final residual — mirroring the paper's layout.  The ``direct`` rows exercise
+the cuDSS-analogue sparse LDLᵀ path (cached symbolic factorization, packed
+level-scheduled numeric kernel) up to the ``DIRECT_BUDGET`` crossover.
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.dispatch import DENSE_BUDGET, make_config
+from repro.core.dispatch import DENSE_BUDGET, DIRECT_BUDGET, make_config, get_plan
 from repro.core.adjoint import sparse_solve_with_info
 from repro.data.poisson import poisson2d, poisson2d_vc
 
 from .common import csv_row, timeit
 
+SMOKE_LADDER = [32, 100]                # 1K, 10K DOF — per-PR CI smoke
 LADDER = [32, 100, 200, 400]            # 1K, 10K, 40K, 160K DOF
 FULL_LADDER = LADDER + [1000]           # +1M DOF with --full
 
@@ -25,9 +28,9 @@ def mem_estimate_bytes(n, nnz, dtype_bytes=8):
     return nnz * (8 + dtype_bytes) + 5 * n * dtype_bytes
 
 
-def run(full: bool = False):
+def run(full: bool = False, smoke: bool = False):
     rows = []
-    ladder = FULL_LADDER if full else LADDER
+    ladder = SMOKE_LADDER if smoke else (FULL_LADDER if full else LADDER)
     for ng in ladder:
         n = ng * ng
         A = poisson2d(ng, dtype=np.float64)
@@ -40,6 +43,17 @@ def run(full: bool = False):
                 jax.jit(lambda val, bb: sparse_solve_with_info(
                     cfg_d, A.with_values(val), bb)), A.val, b)
             entries["dense"] = (t, float(info.resnorm))
+        # explicit backend="direct" tolerates a bigger one-time analyze than
+        # the silent auto window — benchmark up to twice the auto budget
+        if n <= 2 * DIRECT_BUDGET:
+            cfg_s = make_config(A, backend="direct")
+            plan = get_plan(A, cfg_s)      # symbolic analysis (once, eager)
+            t, (x, info) = timeit(
+                jax.jit(lambda val, bb: sparse_solve_with_info(
+                    cfg_s, A.with_values(val), bb)), A.val, b)
+            st = plan.artifacts["direct"].stats
+            entries["direct"] = (t, float(info.resnorm),
+                                 f"nnzL={st['nnz_L']};levels={st['n_levels']}")
         cfg_cg = make_config(A, backend="jnp", method="cg", tol=1e-7,
                              maxiter=20000)
         t, (x, info) = timeit(
@@ -57,10 +71,12 @@ def run(full: bool = False):
         entries["cg_stencil"] = (t, float(info.resnorm))
 
         mem = mem_estimate_bytes(n, A.nnz)
-        for name, (t, res) in entries.items():
+        for name, entry in entries.items():
+            t, res = entry[0], entry[1]
+            extra = f";{entry[2]}" if len(entry) > 2 else ""
             rows.append(csv_row(
                 f"table3/{name}/dof={n}", t * 1e6,
-                f"residual={res:.1e};mem_est={mem/2**20:.1f}MiB"))
+                f"residual={res:.1e};mem_est={mem/2**20:.1f}MiB{extra}"))
     return rows
 
 

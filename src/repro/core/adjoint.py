@@ -49,8 +49,11 @@ def sparse_solve(cfg: SolverConfig, A: SparseTensor, b: jax.Array,
     The forward fetches (or analyzes once) the pattern's cached
     :class:`~repro.core.dispatch.SolverPlan`; the backward solves Aᵀλ = g
     through ``plan.transpose()`` — the SAME plan object for symmetric
-    patterns (kernel layout + preconditioner build reused), a once-analyzed
-    transposed sibling otherwise.  No re-dispatch, no re-analysis per call.
+    patterns (kernel layout + preconditioner build reused); for the direct
+    backend a shared-artifact transpose plan that runs the mirrored (Uᵀ, Lᵀ)
+    sweeps on the FORWARD numeric factors (the per-values setup memo is
+    shared, so the backward refactorizes nothing); a once-analyzed transposed
+    sibling otherwise.  No re-dispatch, no re-analysis per call.
     """
     plan = _dispatch.get_plan(A, cfg)
     row, col = plan.row, plan.col
@@ -67,7 +70,10 @@ def sparse_solve(cfg: SolverConfig, A: SparseTensor, b: jax.Array,
 
     def bwd(res, g):
         val, x = res
-        # adjoint system Aᵀ λ = g — forward plan's transpose view (§3.2.3)
+        # adjoint system Aᵀ λ = g — forward plan's transpose view (§3.2.3).
+        # ``val`` is the identical array object the forward saw (custom_vjp
+        # residual), so backends with a per-values setup memo (direct) reuse
+        # the forward factorization here instead of re-running setup.
         tplan = plan.transpose()
         lam, _ = tplan.solve(tplan.matrix(val), g, None, cfg=tplan.adapt(cfg))
         # ∂L/∂A_ij = −λ_i x_j  on the sparsity pattern — O(nnz)

@@ -1,0 +1,475 @@
+"""Sparse direct factorization backend — the cuDSS analogue (paper §3.1/§3.2.3).
+
+The paper's headline backend is a *direct* sparse solver whose symbolic
+factorization is computed once per sparsity pattern and reused across numeric
+refactorizations and adjoint solves.  This module is that path for the plan
+engine, entirely in JAX:
+
+``symbolic_factor(row, col, n)``  — eager, numpy, values-free (the plan's
+``analyze`` stage).  Computes a fill-reducing ordering (exact minimum degree
+on the symmetrized pattern graph), the per-column elimination structures, the
+static fill-in pattern of L (and its mirror U), a longest-path *level
+schedule* of the elimination DAG, and — the part that makes the numeric
+stages fast — a **packed step program**: every level's work is cut into
+fixed-width steps (finalize entries, rank-1 update tuples, sweep entries,
+pivot divides) so the numeric kernels are single ``lax.scan`` loops over
+uniform index tensors.  One small compiled body serves every level, every
+``with_values`` refresh, every batch element, and the adjoint.
+
+``numeric_factor(art, val)``      — traced-safe (the ``setup`` stage).  Runs
+the numeric LU/LDLᵀ over the precomputed fill pattern: per scan step, one
+fused pivot-divide + scatter-update pair.  Jits, vmaps over batched values,
+and re-traces nothing symbolic.
+
+``factored_solve(art, C, b)``     — two level-scheduled triangular sweeps
+(the ``solve`` stage).  ``transposed=True`` swaps the sweeps (Uᵀ then Lᵀ),
+which is how the adjoint solves Aᵀλ = g on the FORWARD factors — LDLᵀ is
+self-adjoint, LU just runs the mirrored sweeps — zero refactorizations.
+
+Storage layout of the factor vector ``C`` (length ``nnzF + 2``)::
+
+    C[0:n]              pivots  U[k,k]              (permuted order)
+    C[n:n+nnzL]         L entries, column-major     (unit diagonal implicit)
+    C[n+nnzL:nnzF]      U entries, mirror-aligned   (U[j,k] at mirror of L[k,j])
+    C[nnzF]             scratch 0  (padding sink for scatter/gather)
+    C[nnzF+1]           scratch 1  (padding divisor — keeps pads NaN-free)
+
+For symmetric values (method ``ldlt``) the same kernel computes U = D·Lᵀ in
+the mirror half, i.e. an LDLᵀ factorization with D folded into U; the solve
+and adjoint exploit self-adjointness through the plan layer.  No numerical
+pivoting is performed — intended for SPD / diagonally-dominant systems
+(pivoting for indefinite systems is a ROADMAP follow-up).
+
+``incomplete=True`` restricts the update program to the original pattern
+(zero fill): that is ILU(0)/IC(0), which :mod:`repro.core.precond` exposes as
+``precond="ilu"`` sharing this exact machinery.
+"""
+from __future__ import annotations
+
+from typing import List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+__all__ = [
+    "DirectArtifacts", "symbolic_factor", "numeric_factor", "factored_solve",
+]
+
+
+class PackedFactor(NamedTuple):
+    """Step program for the numeric factorization: all arrays are (S, width)
+    int32.  Per step: ``C[fin_lpos] /= C[fin_piv]`` (column finalize), then
+    ``C[up_dst] -= C[up_s1] * C[up_s2]`` (right-looking updates).  Pads point
+    at the scratch slots, so they are exact no-ops."""
+    fin_lpos: jax.Array
+    fin_piv: jax.Array
+    up_s1: jax.Array
+    up_s2: jax.Array
+    up_dst: jax.Array
+
+
+class PackedSweep(NamedTuple):
+    """Step program for one triangular-sweep direction ((S, width) int32).
+
+    ``row`` program (levels leaf→root): forward-L (use ``lpos``) and
+    transposed-Uᵀ (use ``upos`` + divides).  ``col`` program (root→leaf):
+    backward-U (``upos`` + divides) and transposed-Lᵀ (``lpos``).  Per step:
+    ``y[tgt] -= C[pos] * y[src]`` then optionally ``y[dn] /= C[dpiv]``.
+    The solution vector carries one scratch element at index n for pads.
+    """
+    tgt: jax.Array
+    src: jax.Array
+    lpos: jax.Array
+    upos: jax.Array
+    dn: jax.Array
+    dpiv: jax.Array
+
+
+class DirectArtifacts(NamedTuple):
+    """Product of the symbolic analysis — pattern-only, shared by every
+    ``with_values`` refresh, every batch element, and the adjoint."""
+    n: int
+    nnzF: int
+    perm: jax.Array          # perm[k] = original index eliminated at step k
+    ipos: jax.Array          # ipos[v] = elimination position of index v
+    a2f: jax.Array           # COO entry e -> position in C (scatter-add)
+    factor: PackedFactor
+    row_sweep: PackedSweep
+    col_sweep: PackedSweep
+    stats: dict              # nnz_L, fill_ratio, n_levels, flops, n_steps
+
+
+# ---------------------------------------------------------------------------
+# symbolic analysis (eager / numpy — the analyze stage, once per pattern)
+# ---------------------------------------------------------------------------
+
+def _pattern_graph(row: np.ndarray, col: np.ndarray, n: int) -> List[set]:
+    """Adjacency of the symmetrized pattern graph (no self loops)."""
+    mask = row != col
+    rr = np.concatenate([row[mask], col[mask]])
+    cc = np.concatenate([col[mask], row[mask]])
+    key = np.unique(rr.astype(np.int64) * n + cc)
+    adj: List[set] = [set() for _ in range(n)]
+    for i, j in zip((key // n).tolist(), (key % n).tolist()):
+        adj[i].add(j)
+    return adj
+
+
+def _rcm_order(row: np.ndarray, col: np.ndarray, n: int) -> np.ndarray:
+    try:
+        import scipy.sparse as sp
+        from scipy.sparse.csgraph import reverse_cuthill_mckee
+    except Exception:                       # scipy absent — degrade gracefully
+        return np.arange(n, dtype=np.int64)
+    G = sp.csr_matrix((np.ones(len(row)), (row, col)), shape=(n, n))
+    return np.asarray(reverse_cuthill_mckee(G, symmetric_mode=False),
+                      dtype=np.int64)
+
+
+def _eliminate(adj: List[set], n: int, order: Optional[np.ndarray],
+               fill: bool) -> Tuple[np.ndarray, List[list]]:
+    """Graph elimination: returns the elimination order and, per step, the
+    *alive neighbourhood* of the eliminated vertex — exactly the nonzero rows
+    of that column of L (Parter's rule).  ``order=None`` picks the minimum
+    remaining degree each step (exact minimum degree, the AMD objective
+    without its quotient-graph shortcuts); ``fill=False`` skips clique
+    formation, yielding the zero-fill (ILU(0)) structures instead.
+    """
+    INF = np.int64(1) << np.int64(60)
+    deg = np.array([len(a) for a in adj], dtype=np.int64)
+    perm = np.empty(n, dtype=np.int64)
+    structs: List[list] = []
+    for k in range(n):
+        v = int(order[k]) if order is not None else int(np.argmin(deg))
+        perm[k] = v
+        deg[v] = INF
+        nb = adj[v]
+        for u in nb:
+            adj[u].discard(v)
+        if fill:
+            for u in nb:
+                au = adj[u]
+                au |= nb
+                au.discard(u)
+                deg[u] = len(au)
+        else:
+            for u in nb:
+                deg[u] = len(adj[u])
+        structs.append(sorted(nb))
+        adj[v] = set()
+    return perm, structs
+
+
+class _StepPacker:
+    """Greedy packer of (value-tuple) streams into fixed-width steps.
+
+    ``put(stream, items, min_step)`` appends ``items`` to ``stream`` starting
+    no earlier than step ``min_step``, spilling over step boundaries, and
+    returns the step index of the LAST item placed (or ``min_step`` when
+    empty).  Streams share the step axis; each keeps its own fill cursor.
+    """
+
+    def __init__(self, widths: dict):
+        self.widths = dict(widths)
+        self.data = {s: [] for s in widths}       # step -> list per stream
+        self.cursor = {s: 0 for s in widths}      # next step with free space
+
+    def _ensure(self, stream: str, step: int) -> None:
+        rows = self.data[stream]
+        while len(rows) <= step:
+            rows.append([])
+
+    def put(self, stream: str, items: list, min_step: int) -> int:
+        if not items:
+            return min_step
+        w = self.widths[stream]
+        step = max(self.cursor[stream], min_step)
+        pos = 0
+        while pos < len(items):
+            self._ensure(stream, step)
+            room = w - len(self.data[stream][step])
+            if room <= 0:
+                step += 1
+                continue
+            take = items[pos:pos + room]
+            self.data[stream][step].extend(take)
+            pos += len(take)
+            if len(self.data[stream][step]) >= w and pos < len(items):
+                step += 1
+        self.cursor[stream] = step if len(self.data[stream][step]) < w \
+            else step + 1
+        return step
+
+    def n_steps(self) -> int:
+        return max((len(rows) for rows in self.data.values()), default=0)
+
+    def packed(self, stream: str, n_steps: int, pad) -> np.ndarray:
+        w = self.widths[stream]
+        out = np.empty((n_steps, w, len(pad)), dtype=np.int64)
+        out[...] = np.asarray(pad, dtype=np.int64)
+        for s, chunk in enumerate(self.data[stream]):
+            if chunk:
+                out[s, :len(chunk)] = np.asarray(chunk, dtype=np.int64)
+        return out
+
+
+def _width(total: int, n_levels: int, lo: int = 32, hi: int = 1 << 16) -> int:
+    """Step width ≈ mean level load, clamped and rounded to a power of two —
+    few distinct shapes across patterns keeps XLA's compile cache warm."""
+    w = max(lo, min(hi, -(-total // max(n_levels, 1))))
+    return 1 << int(np.ceil(np.log2(w)))
+
+
+def symbolic_factor(row, col, n: int, *, ordering: str = "amd",
+                    incomplete: bool = False) -> DirectArtifacts:
+    """Analyze one sparsity pattern for direct (or incomplete) factorization.
+
+    ``ordering`` ∈ {"amd" (minimum degree, default), "rcm", "natural"}.
+    ``incomplete=True`` produces the ILU(0)/IC(0) program: same storage and
+    kernels, update tuples restricted to the original (symmetrized) pattern.
+    Raises ``ValueError`` when the pattern lacks a structurally full diagonal
+    (no pivoting is performed, so every pivot must exist).
+
+    The analysis is eager even when invoked inside a jit trace (plans are
+    cached on long-lived SparseTensors, so the index tensors must be concrete
+    arrays, never trace-bound constants).
+    """
+    with jax.ensure_compile_time_eval():
+        return _symbolic_factor(row, col, n, ordering, incomplete)
+
+
+def _symbolic_factor(row, col, n: int, ordering: str,
+                     incomplete: bool) -> DirectArtifacts:
+    row = np.asarray(row, dtype=np.int64)
+    col = np.asarray(col, dtype=np.int64)
+    from .sparse import has_full_diagonal
+    if not has_full_diagonal(row, col, n):
+        raise ValueError(
+            "direct factorization needs a structurally full diagonal "
+            "(no pivoting); use an iterative backend for this pattern")
+
+    if incomplete and ordering == "amd":
+        ordering = "natural"        # ILU(0) keeps the assembly order
+    if ordering == "amd":
+        order = None
+    elif ordering == "rcm":
+        order = _rcm_order(row, col, n)
+    elif ordering == "natural":
+        order = np.arange(n, dtype=np.int64)
+    else:
+        raise ValueError(f"unknown ordering {ordering!r}")
+
+    adj = _pattern_graph(row, col, n)
+    perm, structs = _eliminate(adj, n, order, fill=not incomplete)
+    ipos = np.empty(n, dtype=np.int64)
+    ipos[perm] = np.arange(n)
+
+    # L pattern, column-major: column k holds sorted permuted row indices.
+    cols_rows = [np.sort(ipos[np.asarray(s, dtype=np.int64)])
+                 if s else np.empty(0, np.int64) for s in structs]
+    counts = np.array([r.size for r in cols_rows], dtype=np.int64)
+    Lptr = np.concatenate([[0], np.cumsum(counts)])
+    nnzL = int(Lptr[-1])
+    nnzF = n + 2 * nnzL
+    szero, sone = nnzF, nnzF + 1                  # scratch slots in C
+
+    # position lookup over F = diag ∪ L ∪ mirror(U):  key = i*n + j
+    Li = (np.concatenate(cols_rows) if nnzL else np.empty(0, np.int64))
+    Lj = np.repeat(np.arange(n, dtype=np.int64), counts)
+    fkeys = np.concatenate([np.arange(n, dtype=np.int64) * (n + 1),
+                            Li * n + Lj, Lj * n + Li])
+    srt = np.argsort(fkeys)
+    skeys, spos = fkeys[srt], np.arange(nnzF, dtype=np.int64)[srt]
+
+    def lookup(keys: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        idx = np.searchsorted(skeys, keys)
+        idx = np.minimum(idx, max(nnzF - 1, 0))
+        found = (skeys[idx] == keys) if nnzF else np.zeros_like(keys, bool)
+        return spos[idx], found
+
+    a2f, ok = lookup(ipos[row] * n + ipos[col])
+    assert bool(ok.all()), "A entry outside its own symmetrized pattern?"
+
+    # longest-path levels of the elimination DAG: level(i) > level(j) for
+    # every L entry (i, j) — the invariant every schedule below relies on.
+    level = np.zeros(n, dtype=np.int64)
+    for k in range(n):
+        rk = cols_rows[k]
+        if rk.size:
+            np.maximum.at(level, rk, level[k] + 1)
+    n_levels = int(level.max()) + 1 if n else 1
+
+    # ---- packed factorization program -----------------------------------
+    # Columns are walked level by level (elimination DAG order).  Within one
+    # step the body runs finalize-then-update, so a column's updates may
+    # share its finalize step; a new level's finalizes must start strictly
+    # after any step holding earlier levels' updates (those updates write
+    # into the new level's entries and pivots).
+    flops = int(sum(int(c) * int(c) for c in counts))
+    fp = _StepPacker({"fin": _width(nnzL, n_levels),
+                      "up": _width(flops, n_levels)})
+    lvl_cols: List[List[int]] = [[] for _ in range(n_levels)]
+    for k in range(n):
+        lvl_cols[int(level[k])].append(k)
+    kept_updates = 0
+    for l in range(n_levels):
+        # barrier: earlier levels' updates all live in steps < fin start
+        up_cur = fp.cursor["up"]
+        busy = up_cur < len(fp.data["up"]) and bool(fp.data["up"][up_cur])
+        fin_floor = up_cur + 1 if busy else up_cur
+        for k in lvl_cols[l]:
+            rk = cols_rows[k]
+            m = int(rk.size)
+            base = n + int(Lptr[k])
+            fin_end = fp.put(
+                "fin", [(base + t, k) for t in range(m)], fin_floor)
+            if not m:
+                continue
+            ii = np.repeat(rk, m)
+            jj = np.tile(rk, m)
+            s1 = np.repeat(base + np.arange(m), m)
+            s2 = base + nnzL + np.tile(np.arange(m), m)
+            dst, ok = lookup(ii * n + jj)
+            if incomplete:                       # ILU(0): drop fill updates
+                s1, s2, dst = s1[ok], s2[ok], dst[ok]
+            else:
+                assert bool(ok.all()), "fill closure violated"
+            kept_updates += int(dst.size)
+            fp.put("up", list(zip(s1.tolist(), s2.tolist(), dst.tolist())),
+                   fin_end)
+    fS = fp.n_steps()
+    fin = fp.packed("fin", fS, (szero, sone))
+    ups = fp.packed("up", fS, (szero, szero, szero))
+    factor = PackedFactor(
+        fin_lpos=jnp.asarray(fin[:, :, 0], jnp.int32),
+        fin_piv=jnp.asarray(fin[:, :, 1], jnp.int32),
+        up_s1=jnp.asarray(ups[:, :, 0], jnp.int32),
+        up_s2=jnp.asarray(ups[:, :, 1], jnp.int32),
+        up_dst=jnp.asarray(ups[:, :, 2], jnp.int32))
+
+    # ---- packed sweep programs ------------------------------------------
+    # row program: entries grouped by level(row), levels ascending — the
+    # forward L (lpos) and transposed Uᵀ (upos, + divides) sweeps.
+    # col program: entries grouped by level(col), levels descending — the
+    # backward U (upos, + divides) and transposed Lᵀ (lpos) sweeps.
+    # Within a level, a node's divide shares (or follows) the step of its
+    # last incoming add; adds of different levels never share a step.
+    ent_lpos = n + np.arange(nnzL, dtype=np.int64)
+    ent_upos = ent_lpos + nnzL
+    ent_piv_pad = (n, sone)                      # vector scratch / divisor 1
+
+    def _pack_sweep(group_of_entry: np.ndarray, tgt: np.ndarray,
+                    src: np.ndarray, level_order) -> PackedSweep:
+        sp = _StepPacker({"e": _width(nnzL, n_levels),
+                          "d": _width(n, n_levels)})
+        ent_by_g: List[list] = [[] for _ in range(n_levels)]
+        for t in range(nnzL):
+            ent_by_g[int(group_of_entry[t])].append(t)
+        node_by_g: List[list] = [[] for _ in range(n_levels)]
+        for v in range(n):
+            node_by_g[int(level[v])].append(v)
+        floor = 0
+        for l in level_order:
+            ents = ent_by_g[l]
+            by_node: dict = {}
+            for t in ents:
+                by_node.setdefault(int(tgt[t]), []).append(t)
+            last = floor
+            for v in node_by_g[l]:
+                ts = by_node.pop(v, [])
+                e_end = sp.put(
+                    "e", [(tgt[t], src[t], ent_lpos[t], ent_upos[t])
+                          for t in ts], floor)
+                d_end = sp.put("d", [(v, v)], e_end)
+                last = max(last, e_end, d_end)
+            assert not by_node, "sweep entry without its target node?"
+            floor = last + 1        # next level strictly after this one
+        S = sp.n_steps()
+        e = sp.packed("e", S, (n, n, szero, szero))
+        d = sp.packed("d", S, ent_piv_pad)
+        return PackedSweep(
+            tgt=jnp.asarray(e[:, :, 0], jnp.int32),
+            src=jnp.asarray(e[:, :, 1], jnp.int32),
+            lpos=jnp.asarray(e[:, :, 2], jnp.int32),
+            upos=jnp.asarray(e[:, :, 3], jnp.int32),
+            dn=jnp.asarray(d[:, :, 0], jnp.int32),
+            dpiv=jnp.asarray(d[:, :, 1], jnp.int32))
+
+    row_sweep = _pack_sweep(level[Li], Li, Lj, range(n_levels))
+    col_sweep = _pack_sweep(level[Lj], Lj, Li,
+                            range(n_levels - 1, -1, -1))
+
+    stats = {"nnz_L": nnzL, "n_levels": n_levels, "flops": kept_updates,
+             "fill_ratio": float(nnzF) / float(max(len(row), 1)),
+             "n_steps": fS, "ordering": ordering, "incomplete": incomplete}
+    return DirectArtifacts(
+        n=n, nnzF=nnzF,
+        perm=jnp.asarray(perm, jnp.int32), ipos=jnp.asarray(ipos, jnp.int32),
+        a2f=jnp.asarray(a2f, jnp.int32),
+        factor=factor, row_sweep=row_sweep, col_sweep=col_sweep, stats=stats)
+
+
+# ---------------------------------------------------------------------------
+# numeric factorization (traced-safe — the setup stage)
+# ---------------------------------------------------------------------------
+
+def numeric_factor(art: DirectArtifacts, val: jax.Array) -> jax.Array:
+    """Numeric LU/LDLᵀ over the precomputed fill pattern.
+
+    One ``lax.scan`` over the packed step program: pure gather/scatter with
+    uniform shapes, so it compiles once, jits, and vmaps over a leading batch
+    dimension of ``val`` (shared-pattern batches).  Duplicate COO entries
+    accumulate, matching ``coo_matvec`` semantics.
+    """
+    C = jnp.zeros(art.nnzF + 2, dtype=val.dtype)
+    C = C.at[art.a2f].add(val).at[art.nnzF + 1].set(1.0)
+
+    def step(C, xs):
+        fl, fpv, s1, s2, dst = xs
+        C = C.at[fl].set(C[fl] / C[fpv])
+        C = C.at[dst].add(-C[s1] * C[s2])
+        return C, None
+
+    C, _ = lax.scan(step, C, tuple(art.factor))
+    return C
+
+
+# ---------------------------------------------------------------------------
+# triangular sweeps (traced-safe — the solve stage)
+# ---------------------------------------------------------------------------
+
+def _sweep(art: DirectArtifacts, C: jax.Array, c: jax.Array,
+           program: PackedSweep, use_upos: bool, divide: bool) -> jax.Array:
+    y = jnp.concatenate([c, jnp.zeros((1,), c.dtype)])   # scratch slot at n
+    pos = program.upos if use_upos else program.lpos
+
+    def step(y, xs):
+        tgt, src, p, dn, dpiv = xs
+        y = y.at[tgt].add(-C[p] * y[src])
+        if divide:
+            y = y.at[dn].set(y[dn] / C[dpiv])
+        return y, None
+
+    y, _ = lax.scan(step, y, (program.tgt, program.src, pos,
+                              program.dn, program.dpiv))
+    return y[:-1]
+
+
+def factored_solve(art: DirectArtifacts, C: jax.Array, b: jax.Array,
+                   *, transposed: bool = False) -> jax.Array:
+    """x with A x = b (or Aᵀ x = b) from the factors ``C``.
+
+    Forward: permute, unit-L then U sweeps, unpermute.  Transposed: the SAME
+    factors with Uᵀ then Lᵀ sweeps — this is the adjoint's zero-refactorize
+    path (LDLᵀ is self-adjoint; LU mirrors the sweeps).
+    """
+    c = b[art.perm]
+    if transposed:
+        w = _sweep(art, C, c, art.row_sweep, use_upos=True, divide=True)
+        x = _sweep(art, C, w, art.col_sweep, use_upos=False, divide=False)
+    else:
+        y = _sweep(art, C, c, art.row_sweep, use_upos=False, divide=False)
+        x = _sweep(art, C, y, art.col_sweep, use_upos=True, divide=True)
+    return x[art.ipos]

@@ -1,15 +1,24 @@
 """Backend registry + plan-cached auto-dispatch (paper §3.1, §3.2.3, App. A).
 
-Four built-in backends behind one API — the TPU/JAX analogue of torch-sla's
+Five built-in backends behind one API — the TPU/JAX analogue of torch-sla's
 {scipy, eigen, cudss, cupy, pytorch}:
 
 | backend   | device  | methods                      | regime                         |
 |-----------|---------|------------------------------|--------------------------------|
 | dense     | MXU     | lu, cholesky                 | direct; n ≤ dense budget       |
+| direct    | any     | ldlt, lu                     | sparse direct (cuDSS analogue):|
+|           |         |                              | cached symbolic factorization  |
 | jnp       | any     | cg, bicgstab, gmres          | general COO, segment-sum SpMV  |
 | pallas    | TPU     | cg, bicgstab, gmres          | block-ELL Pallas SpMV          |
 | stencil   | TPU     | cg, bicgstab                 | matrix-free structured grids   |
 | dist      | mesh    | cg, bicgstab, pipelined_cg   | DSparseTensor (core/distributed)|
+
+The ``direct`` backend (:mod:`repro.core.direct`) is the paper's headline
+path: ``analyze`` computes the fill-reducing ordering + static fill pattern
+ONCE per pattern, ``setup`` is a jit/vmap-safe numeric refactorization memoized
+per values array (``PLAN_STATS["factorize"]``/``["setup_reuse"]``), and the
+adjoint reuses the forward factors — LDLᵀ is self-adjoint, LU swaps the
+triangular sweeps via a shared-artifact transpose plan.
 
 Plan lifecycle (paper §3.2.3 "one symbolic setup per pattern")
 --------------------------------------------------------------
@@ -46,26 +55,36 @@ assert reuse; ``register_backend`` adds custom backends either as a
 from __future__ import annotations
 
 import dataclasses
+import weakref
 from functools import partial
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from . import direct as _direct
 from . import precond as _precond
 from . import solvers as _solvers
-from .sparse import SparseTensor, build_bell, coo_matvec
+from .sparse import SparseTensor, build_bell, coo_matvec, has_full_diagonal
 
 DENSE_BUDGET = 4096          # TPU dense-direct crossover (measured, see EXPERIMENTS.md)
+DIRECT_BUDGET = 8192         # sparse-direct crossover on the silent auto path:
+                             # the eager Python symbolic analysis is a one-time
+                             # ~10 s at this size (measured), amortized across
+                             # the plan's lifetime; explicit backend="direct"
+                             # and illcond_hint accept larger systems
 DEFAULT_MAXITER = 2000
 
 # observable analyze/setup/cache counters (reset with ``reset_plan_stats``)
 PLAN_STATS: Dict[str, int] = {
     "analyze": 0,          # SolverPlan constructions (pattern analyses)
-    "setup": 0,            # values-dependent setups
+    "setup": 0,            # values-dependent setups actually executed
+    "setup_reuse": 0,      # setups served from the per-values memo
+    "factorize": 0,        # numeric factorizations run by the direct backend
     "cache_hit": 0,        # plan served from a SparseTensor's plan cache
     "cache_miss": 0,       # plan analyzed fresh
-    "transpose_shared": 0,  # adjoint reused the forward plan (symmetric)
+    "transpose_shared": 0,  # adjoint reused the forward plan (or its factors)
 }
 
 
@@ -166,9 +185,16 @@ class Backend:
     name: str = "abstract"
     methods: Tuple[str, ...] = ()
     handles_batch = False       # True: backend does its own batch vmapping
+    cache_setup = False         # True: memoize setup() per values array
 
     def applicable(self, A: SparseTensor) -> bool:
         return True
+
+    def transpose_plan(self, plan: "SolverPlan") -> Optional["SolverPlan"]:
+        """Optionally build the adjoint plan from this plan's own artifacts
+        (zero re-analysis).  ``None`` falls back to analyzing a transposed
+        sibling pattern — the generic non-symmetric path."""
+        return None
 
     def default_method(self, A: SparseTensor) -> str:
         sym = A.props.get("symmetric", False)
@@ -201,6 +227,75 @@ class DenseBackend(Backend):
 
     def solve(self, plan, dense, A, b, x0, cfg):
         return _solvers.dense_solve(dense, b, cfg.method)
+
+
+class DirectBackend(Backend):
+    """Sparse direct LDLᵀ/LU with a cached symbolic factorization — the
+    cuDSS-analogue path (paper §3.1/§3.2.3).  ``analyze`` runs the eager
+    symbolic stage of :mod:`repro.core.direct` once per pattern; ``setup``
+    is the jit/vmap-safe numeric refactorization (memoized per values array
+    via ``cache_setup``); ``solve`` is two level-scheduled triangular sweeps.
+    The adjoint reuses the forward factors: symmetric patterns share the plan
+    outright, non-symmetric ones get a shared-artifact transpose plan whose
+    solve runs the mirrored (Uᵀ, Lᵀ) sweeps — zero refactorizations either way.
+    """
+    name = "direct"
+    methods = ("ldlt", "lu")
+    cache_setup = True
+
+    def applicable(self, A):
+        n, m = A.shape
+        if n != m:
+            return False
+        if isinstance(A.row, jax.core.Tracer) or \
+                isinstance(A.col, jax.core.Tracer):
+            return False        # symbolic analysis needs a concrete pattern
+        if "struct_full_diag" not in A.props:
+            A.props["struct_full_diag"] = has_full_diagonal(A.row, A.col, n)
+        return A.props["struct_full_diag"]   # no pivoting: pivots must exist
+
+    def default_method(self, A):
+        return "ldlt" if A.props.get("symmetric", False) else "lu"
+
+    def analyze(self, cfg, pattern):
+        if cfg.method == "ldlt" and not pattern.props.get("symmetric", False):
+            raise ValueError(
+                "method='ldlt' needs symmetric values; use method='lu'")
+        art = _direct.symbolic_factor(np.asarray(pattern.row),
+                                      np.asarray(pattern.col),
+                                      pattern.shape[0])
+        return {"direct": art, "transposed": False}
+
+    def setup(self, plan, A):
+        PLAN_STATS["factorize"] += 1
+        return _direct.numeric_factor(plan.artifacts["direct"], A.val)
+
+    def solve(self, plan, C, A, b, x0, cfg):
+        x = _direct.factored_solve(plan.artifacts["direct"], C, b,
+                                   transposed=plan.artifacts["transposed"])
+        r = b - coo_matvec(A.val, A.row, A.col, x, A.shape[0])
+        rn = jnp.linalg.norm(r)
+        target = jnp.maximum(cfg.tol * jnp.linalg.norm(b), cfg.atol)
+        return x, _solvers.SolveInfo(iters=jnp.asarray(1), resnorm=rn,
+                                     converged=rn <= target)
+
+    def transpose_plan(self, plan):
+        """Adjoint plan sharing THIS plan's symbolic artifacts and numeric
+        factors (the setup memo is shared): solving Aᵀλ = g runs the Uᵀ/Lᵀ
+        sweeps on the forward factorization."""
+        tp = SolverPlan.__new__(SolverPlan)
+        tp.cfg = plan.cfg
+        tp.backend = plan.backend
+        tp.row, tp.col = plan.col, plan.row
+        tp.shape = (plan.shape[1], plan.shape[0])
+        tp.props = dict(plan.props)
+        tp.bell, tp.stencil = None, None
+        tp._cache = {tp.cfg.plan_key(): tp}
+        tp._tplan = plan
+        tp._setup_memo = plan._setup_memo       # forward factors reused
+        tp.artifacts = dict(plan.artifacts,
+                            transposed=not plan.artifacts["transposed"])
+        return tp
 
 
 class IterativeBackend(Backend):
@@ -274,8 +369,8 @@ class _FnBackend(Backend):
 
 
 BACKENDS: Dict[str, Backend] = {
-    b.name: b for b in (DenseBackend(), JnpBackend(), PallasBackend(),
-                        StencilBackend())}
+    b.name: b for b in (DenseBackend(), DirectBackend(), JnpBackend(),
+                        PallasBackend(), StencilBackend())}
 
 
 def register_backend(name: str, solve_fn: Optional[Callable] = None,
@@ -293,8 +388,10 @@ def register_backend(name: str, solve_fn: Optional[Callable] = None,
 
 def select_backend(A: SparseTensor, backend: str, method: str):
     """Device- and size-aware auto-dispatch (paper §3.1 rules, TPU constants):
-    (i) honor explicit overrides; (ii) direct below the dense budget;
-    (iii) iterative above, preferring the Pallas/stencil SpMV when the tensor
+    (i) honor explicit overrides; (ii) dense-direct below the dense budget;
+    (iii) sparse-direct (cached symbolic factorization) for mid-size systems
+    and whenever the caller hints ill-conditioning (Krylov stalls there);
+    (iv) iterative above, preferring the Pallas/stencil SpMV when the tensor
     carries that layout; CG when SPD-ish, BiCGStab otherwise."""
     n = A.shape[0]
     platform = jax.default_backend()
@@ -304,8 +401,16 @@ def select_backend(A: SparseTensor, backend: str, method: str):
         elif n <= DENSE_BUDGET and not A.batch_shape and \
                 BACKENDS["dense"].applicable(A):
             backend = "dense"
+        elif A.props.get("illcond_hint", False) and n <= 4 * DIRECT_BUDGET \
+                and BACKENDS["direct"].applicable(A):
+            # the hint is an explicit opt-in, so it buys a wider direct
+            # window — the caller accepts the one-time (minutes-scale at the
+            # ceiling) symbolic analysis over a stalling Krylov solve
+            backend = "direct"
         elif A.bell is not None and platform == "tpu":
             backend = "pallas"
+        elif n <= DIRECT_BUDGET and BACKENDS["direct"].applicable(A):
+            backend = "direct"
         else:
             backend = "jnp"
     if method == "auto":
@@ -353,13 +458,36 @@ class SolverPlan:
         self.stencil = A.stencil
         self._cache = cache if cache is not None else {cfg.plan_key(): self}
         self._tplan: Optional["SolverPlan"] = None
+        self._setup_memo: dict = {}
         PLAN_STATS["analyze"] += 1
         self.artifacts = self.backend.analyze(cfg, self)
 
     # -- stage ❷: values-dependent setup (traced-safe) ----------------------
     def setup(self, A: SparseTensor):
+        """Run (or reuse) the backend's values-dependent setup.
+
+        Backends with ``cache_setup`` (the direct backend's numeric
+        factorization) memoize the state per values *array*: a tolerance
+        sweep, a continuation loop, and the adjoint backward all reuse ONE
+        factorization — identity of ``A.val`` is the key, which holds across
+        custom_vjp forward/backward in both eager and jit traces.  The memo
+        is single-slot (latest values win), shared with the transpose plan
+        (so Aᵀ solves never refactorize), and holds the values array weakly:
+        a dead array can never produce a hit, and dropping the entry when it
+        dies keeps tracer-valued states from outliving their trace."""
+        if self.backend.cache_setup:
+            hit = self._setup_memo.get("state")
+            if hit is not None and hit[0]() is A.val:
+                PLAN_STATS["setup_reuse"] += 1
+                return hit[1]
         PLAN_STATS["setup"] += 1
-        return self.backend.setup(self, A)
+        state = self.backend.setup(self, A)
+        if self.backend.cache_setup:
+            memo = self._setup_memo
+            memo["state"] = (
+                weakref.ref(A.val, lambda _, m=memo: m.pop("state", None)),
+                state)
+        return state
 
     # -- stage ❸: solve ------------------------------------------------------
     def solve_single(self, A: SparseTensor, b, x0=None, state=None,
@@ -377,6 +505,22 @@ class SolverPlan:
         if self.backend.handles_batch:
             return self.backend.solve(self, self.setup(A), A, b, x0, cfg)
         batch = jnp.broadcast_shapes(A.batch_shape, b.shape[:-1])
+        if batch and not A.batch_shape:
+            # multi-rhs on ONE matrix: a single setup (one factorization /
+            # preconditioner build) serves every right-hand side — only the
+            # solve stage is vmapped.
+            state = self.setup(A)
+            fb = b.reshape((-1, b.shape[-1]))
+
+            def one(rhs, xx0=None):
+                return self.backend.solve(self, state, A, rhs, xx0, cfg)
+
+            if x0 is None:
+                xs, infos = jax.vmap(lambda rhs: one(rhs))(fb)
+            else:
+                fx0 = jnp.broadcast_to(x0, batch + x0.shape[-1:]).reshape(fb.shape)
+                xs, infos = jax.vmap(one)(fb, fx0)
+            return xs.reshape(batch + (b.shape[-1],)), infos
         if batch:
             val = jnp.broadcast_to(A.val, batch + A.val.shape[-1:])
             bb = jnp.broadcast_to(b, batch + b.shape[-1:])
@@ -411,7 +555,10 @@ class SolverPlan:
         """Plan for the adjoint system Aᵀλ = g (paper §3.2.3).
 
         Symmetric pattern → the SAME plan (layouts + preconditioner build
-        shared).  Otherwise a transposed sibling is analyzed once and cached
+        shared).  A backend may instead derive the adjoint plan from its own
+        artifacts (``Backend.transpose_plan`` — the direct backend shares its
+        symbolic factorization AND numeric factors, swapping the triangular
+        sweeps).  Otherwise a transposed sibling is analyzed once and cached
         here; its block-ELL layout is rebuilt eagerly when the pattern is
         concrete, and the stencil kernel (whose values encode A, not Aᵀ) is
         dropped in favour of the COO path — matching the forward numerics.
@@ -423,6 +570,11 @@ class SolverPlan:
             PLAN_STATS["transpose_shared"] += 1
             self._tplan = self
             return self
+        tp = self.backend.transpose_plan(self)
+        if tp is not None:
+            PLAN_STATS["transpose_shared"] += 1
+            self._tplan = tp
+            return tp
 
         tbell = None
         if self.bell is not None and not isinstance(self.row, jax.core.Tracer):

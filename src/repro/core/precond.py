@@ -1,10 +1,15 @@
 """Preconditioners, split into eager ``build(pattern)`` + traced ``refresh(values)``.
 
 The paper's pytorch-native backend supports only Jacobi (its stated
-limitation, §5).  We reproduce Jacobi faithfully and add three *beyond-paper*
-matvec-only preconditioners that suit TPU (no scalar triangular solves):
-block-Jacobi (dense MXU-sized diagonal blocks), Chebyshev polynomial, and a
-geometric multigrid V-cycle (``precond="mg"``, stencil operators only).
+limitation, §5).  We reproduce Jacobi faithfully and add *beyond-paper*
+preconditioners: block-Jacobi (dense MXU-sized diagonal blocks), Chebyshev
+polynomial, a geometric multigrid V-cycle (``precond="mg"``, stencil
+operators only), and an incomplete factorization (``precond="ilu"``,
+ILU(0)/IC(0)) that shares the direct backend's symbolic machinery
+(:mod:`repro.core.direct`): the zero-fill elimination structures and the
+packed level schedule are computed once per pattern in ``build``, and the
+numeric refactorization + two level-scheduled triangular sweeps are
+traced-safe ``lax.scan`` kernels.
 
 Plan protocol (used by :class:`repro.core.dispatch.SolverPlan`):
 
@@ -35,7 +40,7 @@ __all__ = [
 ]
 
 PRECONDITIONERS = ("none", "identity", "jacobi", "block_jacobi", "chebyshev",
-                   "mg")
+                   "mg", "ilu")
 
 
 def identity():
@@ -168,6 +173,19 @@ class PreconditionerPlan:
                 self._bj_idx = None
             else:
                 self._bj_idx = _bj_indices(r, c, block)
+        if self.name == "ilu":
+            # eager pattern part: the direct backend's symbolic stage in
+            # zero-fill (ILU(0)) mode — structures + packed level schedule
+            from . import direct as _direct
+            try:
+                r = np.asarray(row).astype(np.int64)
+                c = np.asarray(col).astype(np.int64)
+            except Exception:
+                raise ValueError(
+                    "precond='ilu' needs a concrete sparsity pattern "
+                    "(symbolic analysis is eager)")
+            self._ilu = _direct.symbolic_factor(r, c, self.shape[0],
+                                                incomplete=True)
 
     def refresh(self, A, matvec: Callable) -> Callable:
         """values-dependent stage — traced-safe; one call per solver setup."""
@@ -191,13 +209,18 @@ class PreconditionerPlan:
             nx, ny = self.stencil.nx, self.stencil.ny
             v5 = A.val.reshape(5, nx, ny)
             return MultigridPreconditioner.from_planes(v5)
+        if self.name == "ilu":
+            from . import direct as _direct
+            art = self._ilu
+            C = _direct.numeric_factor(art, A.val)   # traced-safe refactorize
+            return lambda r: _direct.factored_solve(art, C, r)
         raise ValueError(f"unknown preconditioner {self.name!r}")
 
 
 def make_preconditioner(name: str, A, matvec: Callable):
     """One-shot factory: build(pattern) + refresh(values) in one call.
 
-    Name ∈ {none, jacobi, block_jacobi, chebyshev, mg}.  Prefer going through
+    Name ∈ {none, jacobi, block_jacobi, chebyshev, mg, ilu}.  Prefer going through
     a :class:`~repro.core.dispatch.SolverPlan` so the build stage is cached.
     """
     plan = PreconditionerPlan(name, A.row, A.col, A.shape, stencil=A.stencil)

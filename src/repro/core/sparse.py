@@ -28,8 +28,18 @@ __all__ = [
     "coo_matvec",
     "coo_to_dense",
     "detect_properties",
+    "has_full_diagonal",
     "build_bell",
 ]
+
+
+def has_full_diagonal(row, col, n: int) -> bool:
+    """True when every diagonal position is structurally present — the pivot
+    prerequisite of the no-pivoting direct factorization (core/direct.py).
+    ``row``/``col`` must be concrete."""
+    r = np.asarray(row)
+    c = np.asarray(col)
+    return bool(np.unique(r[r == c]).size == n)
 
 
 # ---------------------------------------------------------------------------
@@ -92,6 +102,8 @@ def detect_properties(val, row, col, shape, check_values: bool = True) -> dict:
     except Exception:  # traced
         return props
     props["sorted_rows"] = bool(np.all(np.diff(r) >= 0))
+    # pivot availability for the no-pivoting direct backend (core/direct.py)
+    props["struct_full_diag"] = has_full_diagonal(r, c, shape[0])
     key_f = (r.astype(np.int64) * shape[1] + c)
     key_t = (c.astype(np.int64) * shape[1] + r)
     of, ot = np.argsort(key_f), np.argsort(key_t)
@@ -306,6 +318,17 @@ class SparseTensor:
               method: Optional[str] = None, tol: float = 1e-6,
               atol: float = 0.0, maxiter: Optional[int] = None,
               precond: str = "jacobi", x0=None):
+        """Differentiable solve of ``A x = b`` through the plan engine.
+
+        ``backend`` ∈ {auto, dense, direct, jnp, pallas, stencil}: ``direct``
+        is the sparse LDLᵀ/LU path with a cached symbolic factorization
+        (methods ``ldlt``/``lu``); auto prefers it for mid-size systems and
+        whenever ``props["illcond_hint"]`` is set.  ``precond`` ∈ {none,
+        jacobi, block_jacobi, chebyshev, mg, ilu} applies to the iterative
+        backends; ``ilu`` is ILU(0)/IC(0) built on the same symbolic
+        machinery.  Multiple right-hand sides (leading batch dims on ``b``)
+        share one setup — a single factorization serves the whole batch.
+        """
         from . import adjoint, dispatch
         cfg = dispatch.make_config(self, backend=backend, method=method,
                                    tol=tol, atol=atol, maxiter=maxiter,

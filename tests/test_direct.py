@@ -1,0 +1,297 @@
+"""Direct sparse solver backend (the cuDSS analogue — paper §3.1/§3.2.3).
+
+Covers: LDLᵀ/LU accuracy vs the dense backend on Poisson-2D and a
+non-symmetric convection pattern; gradcheck vs dense autodiff; the plan
+engine's reuse contract (ONE symbolic analysis + ONE numeric factorization
+across a tolerance sweep including the backward pass); the transposed-sweep
+adjoint for LU; batched values / multi-rhs; the kernel-level orderings; the
+auto-dispatch preference; and the ILU(0) preconditioner built on the same
+symbolic machinery.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (SparseTensor, PLAN_STATS, get_plan, make_config,
+                        reset_plan_stats)
+from repro.core import dispatch
+from repro.core.direct import symbolic_factor, numeric_factor, factored_solve
+from repro.data.poisson import poisson1d, poisson2d
+
+
+@pytest.fixture()
+def A():
+    return poisson2d(12)    # 144 dof, SPD
+
+
+def _convection(n, c=0.4):
+    """1D convection-diffusion: symmetric pattern, non-symmetric values."""
+    A1 = poisson1d(n)
+    val = np.asarray(A1.val).copy()
+    val[np.asarray(A1.col) == np.asarray(A1.row) - 1] = -1.0 - c
+    val[np.asarray(A1.col) == np.asarray(A1.row) + 1] = -1.0 + c
+    return SparseTensor(val, A1.row, A1.col, (n, n))
+
+
+# ---------------------------------------------------------------------------
+# accuracy vs the dense backend (acceptance: 1e-8 at f64)
+# ---------------------------------------------------------------------------
+
+def test_direct_matches_dense_poisson2d(A):
+    b = jnp.asarray(np.random.default_rng(0).normal(size=A.shape[0]))
+    x = A.solve(b, backend="direct")
+    xd = A.solve(b, backend="dense", method="cholesky")
+    np.testing.assert_allclose(np.asarray(x), np.asarray(xd),
+                               rtol=1e-10, atol=1e-8)
+    assert float(jnp.linalg.norm(A @ x - b)) < 1e-10
+
+
+def test_direct_matches_dense_nonsymmetric_convection():
+    B = _convection(64, c=0.4)
+    assert not B.props["symmetric"]
+    b = jnp.asarray(np.random.default_rng(1).normal(size=64))
+    x = B.solve(b, backend="direct")        # default method resolves to lu
+    xd = B.solve(b, backend="dense", method="lu")
+    np.testing.assert_allclose(np.asarray(x), np.asarray(xd),
+                               rtol=1e-10, atol=1e-8)
+    cfg = make_config(B, backend="direct")
+    assert cfg.method == "lu"
+
+
+def test_direct_requires_structural_diagonal():
+    # off-diagonal-only pattern: no pivots without pivoting → clear error
+    A = SparseTensor(np.array([1.0, 1.0]), np.array([0, 1]),
+                     np.array([1, 0]), (2, 2))
+    with pytest.raises(ValueError, match="diagonal"):
+        A.solve(jnp.ones(2), backend="direct")
+
+
+def test_ldlt_rejects_nonsymmetric_values():
+    B = _convection(16)
+    with pytest.raises(ValueError, match="ldlt"):
+        B.solve(jnp.ones(16), backend="direct", method="ldlt")
+
+
+# ---------------------------------------------------------------------------
+# kernel level: orderings and the transposed sweeps on shared factors
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("ordering", ["amd", "rcm", "natural"])
+def test_symbolic_orderings_all_solve_exactly(ordering):
+    A = poisson2d(8)
+    b = jnp.asarray(np.random.default_rng(2).normal(size=A.shape[0]))
+    art = symbolic_factor(np.asarray(A.row), np.asarray(A.col), A.shape[0],
+                          ordering=ordering)
+    x = factored_solve(art, numeric_factor(art, A.val), b)
+    np.testing.assert_allclose(np.asarray(A @ x), np.asarray(b), atol=1e-10)
+
+
+def test_transposed_sweeps_solve_At_on_forward_factors():
+    B = _convection(48, c=0.3)
+    b = jnp.asarray(np.random.default_rng(3).normal(size=48))
+    art = symbolic_factor(np.asarray(B.row), np.asarray(B.col), 48)
+    C = numeric_factor(art, B.val)          # ONE factorization of B
+    xt = factored_solve(art, C, b, transposed=True)
+    xtd = jnp.linalg.solve(B.todense().T, b)
+    np.testing.assert_allclose(np.asarray(xt), np.asarray(xtd),
+                               rtol=1e-10, atol=1e-10)
+
+
+def test_transpose_plan_shares_factors_nonsymmetric():
+    B = _convection(40)
+    b = jnp.ones(40)
+    plan = B.plan(backend="direct")
+    tp = plan.transpose()
+    assert tp is not plan
+    assert tp.artifacts["direct"] is plan.artifacts["direct"]   # shared symbolic
+    assert tp.transpose() is plan                               # (Aᵀ)ᵀ = A
+    x, info = tp.solve(tp.matrix(B.val), b)
+    assert float(jnp.linalg.norm(B.T.todense() @ x - b)) < 1e-10
+    assert bool(info.converged)
+
+
+# ---------------------------------------------------------------------------
+# gradients: adjoint on forward factors must match dense autodiff
+# ---------------------------------------------------------------------------
+
+def test_gradcheck_direct_symmetric_matches_dense_autodiff(A):
+    rng = np.random.default_rng(4)
+    b = jnp.asarray(rng.normal(size=A.shape[0]))
+
+    def loss(val, rhs):
+        x = A.with_values(val).solve(rhs, backend="direct")
+        return jnp.sum(x ** 2)
+
+    def loss_dense(val, rhs):
+        return jnp.sum(jnp.linalg.solve(A.with_values(val).todense(), rhs) ** 2)
+
+    g = jax.grad(loss, (0, 1))(A.val, b)
+    gd = jax.grad(loss_dense, (0, 1))(A.val, b)
+    np.testing.assert_allclose(np.asarray(g[0]), np.asarray(gd[0]),
+                               rtol=1e-8, atol=1e-8)
+    np.testing.assert_allclose(np.asarray(g[1]), np.asarray(gd[1]),
+                               rtol=1e-8, atol=1e-8)
+
+
+def test_gradcheck_direct_nonsymmetric_matches_dense_autodiff():
+    B = _convection(48, c=0.4)
+    rng = np.random.default_rng(5)
+    b = jnp.asarray(rng.normal(size=48))
+
+    def loss(val, rhs):
+        x = B.with_values(val).solve(rhs, backend="direct")
+        return jnp.sum(x ** 3)
+
+    def loss_dense(val, rhs):
+        return jnp.sum(jnp.linalg.solve(B.with_values(val).todense(), rhs) ** 3)
+
+    g = jax.grad(loss, (0, 1))(B.val, b)
+    gd = jax.grad(loss_dense, (0, 1))(B.val, b)
+    np.testing.assert_allclose(np.asarray(g[0]), np.asarray(gd[0]),
+                               rtol=1e-8, atol=1e-8)
+    np.testing.assert_allclose(np.asarray(g[1]), np.asarray(gd[1]),
+                               rtol=1e-8, atol=1e-8)
+
+
+def test_gradcheck_direct_under_jit(A):
+    b = jnp.ones(A.shape[0])
+
+    def loss(val):
+        return jnp.sum(A.with_values(val).solve(b, backend="direct") ** 2)
+
+    def loss_dense(val):
+        return jnp.sum(jnp.linalg.solve(A.with_values(val).todense(), b) ** 2)
+
+    g = jax.jit(jax.grad(loss))(A.val)
+    gd = jax.grad(loss_dense)(A.val)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(gd),
+                               rtol=1e-8, atol=1e-8)
+
+
+# ---------------------------------------------------------------------------
+# plan-engine reuse (acceptance: 1 analyze + 1 factorize incl. backward)
+# ---------------------------------------------------------------------------
+
+def test_tolerance_sweep_plus_backward_one_analysis_one_factorization():
+    A = poisson2d(10)               # fresh pattern: nothing cached yet
+    b = jnp.ones(A.shape[0])
+
+    def sweep_loss(val):
+        acc = 0.0
+        for tol in (1e-4, 1e-8, 1e-12):
+            x = A.with_values(val).solve(b, backend="direct", tol=tol)
+            acc = acc + jnp.sum(x ** 2)
+        return acc
+
+    reset_plan_stats()
+    jax.grad(sweep_loss)(A.val)
+    assert PLAN_STATS["analyze"] == 1, PLAN_STATS
+    assert PLAN_STATS["factorize"] == 1, PLAN_STATS
+    assert PLAN_STATS["setup"] == 1, PLAN_STATS
+    # 2 forward reuses + 3 backward reuses, all on the one factorization
+    assert PLAN_STATS["setup_reuse"] == 5, PLAN_STATS
+    assert PLAN_STATS["transpose_shared"] == 1, PLAN_STATS
+
+
+def test_sweep_plus_backward_shares_factors_nonsymmetric_lu():
+    B = _convection(56, c=0.3)      # fresh non-symmetric pattern
+    b = jnp.ones(56)
+
+    def sweep_loss(val):
+        acc = 0.0
+        for tol in (1e-4, 1e-8, 1e-12):
+            x = B.with_values(val).solve(b, backend="direct", tol=tol)
+            acc = acc + jnp.sum(x ** 2)
+        return acc
+
+    reset_plan_stats()
+    jax.grad(sweep_loss)(B.val)
+    # the adjoint runs the transposed sweeps on the forward factors: still
+    # exactly one symbolic analysis and one numeric factorization
+    assert PLAN_STATS["analyze"] == 1, PLAN_STATS
+    assert PLAN_STATS["factorize"] == 1, PLAN_STATS
+    assert PLAN_STATS["transpose_shared"] == 1, PLAN_STATS
+
+
+def test_batched_values_vmap_single_analysis(A):
+    vals = jnp.stack([A.val, 2.0 * A.val, 0.5 * A.val])
+    Ab = SparseTensor(vals, A.row, A.col, A.shape, props=A.props)
+    bs = jnp.ones((3, A.shape[0]))
+    reset_plan_stats()
+    xs, _ = dispatch.solve_impl(make_config(Ab, backend="direct"), Ab, bs)
+    assert PLAN_STATS["analyze"] == 1, PLAN_STATS
+    for i, s in enumerate((1.0, 2.0, 0.5)):
+        r = A.with_values(A.val * s) @ xs[i] - bs[i]
+        assert float(jnp.linalg.norm(r)) < 1e-9
+
+
+def test_multirhs_single_factorization(A):
+    bs = jnp.asarray(np.random.default_rng(6).normal(size=(4, A.shape[0])))
+    reset_plan_stats()
+    xs = A.solve(bs, backend="direct")
+    # one matrix, four right-hand sides: ONE setup serves the whole batch
+    assert PLAN_STATS["factorize"] == 1, PLAN_STATS
+    for i in range(4):
+        assert float(jnp.linalg.norm(A @ xs[i] - bs[i])) < 1e-9
+
+
+# ---------------------------------------------------------------------------
+# auto-dispatch: direct preferred mid-size and when ill-conditioning is hinted
+# ---------------------------------------------------------------------------
+
+def test_auto_prefers_direct_midsize_and_illcond():
+    mid = poisson2d(80)     # 6400: above DENSE_BUDGET, below DIRECT_BUDGET
+    assert dispatch.select_backend(mid, "auto", "auto") == ("direct", "ldlt")
+    big = poisson2d(150)    # 22500 > DIRECT_BUDGET → iterative
+    assert dispatch.select_backend(big, "auto", "auto") == ("jnp", "cg")
+    big.props["illcond_hint"] = True
+    assert dispatch.select_backend(big, "auto", "auto") == ("direct", "ldlt")
+
+
+# ---------------------------------------------------------------------------
+# ILU(0) preconditioner on the shared symbolic machinery
+# ---------------------------------------------------------------------------
+
+def test_ilu_precond_accelerates_cg():
+    A = poisson2d(24)       # 576 dof
+    b = jnp.ones(A.shape[0])
+    cfg_j = make_config(A, backend="jnp", method="cg", tol=1e-10,
+                        precond="jacobi")
+    cfg_i = make_config(A, backend="jnp", method="cg", tol=1e-10,
+                        precond="ilu")
+    _, info_j = dispatch.solve_impl(cfg_j, A, b)
+    x, info_i = dispatch.solve_impl(cfg_i, A, b)
+    assert float(jnp.linalg.norm(A @ x - b)) < 1e-7
+    assert int(info_i.iters) < int(info_j.iters), (
+        int(info_i.iters), int(info_j.iters))
+
+
+def test_ilu_precond_differentiable():
+    A = poisson2d(10)
+    b = jnp.ones(A.shape[0])
+
+    def loss(val):
+        x = A.with_values(val).solve(b, backend="jnp", method="cg",
+                                     tol=1e-13, precond="ilu")
+        return jnp.sum(x ** 2)
+
+    def loss_dense(val):
+        return jnp.sum(jnp.linalg.solve(A.with_values(val).todense(), b) ** 2)
+
+    g = jax.jit(jax.grad(loss))(A.val)
+    gd = jax.grad(loss_dense)(A.val)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(gd),
+                               rtol=1e-6, atol=1e-8)
+
+
+def test_ilu_exact_on_tridiagonal():
+    # a tridiagonal pattern has zero fill: ILU(0) IS the exact factorization
+    A = poisson1d(32)
+    b = jnp.asarray(np.random.default_rng(7).normal(size=32))
+    plan = dispatch.get_plan(A, make_config(A, backend="jnp", method="cg",
+                                            tol=1e-12, precond="ilu"))
+    M = plan.artifacts["precond"].refresh(A, dispatch.make_matvec(A))
+    np.testing.assert_allclose(np.asarray(M(b)),
+                               np.asarray(jnp.linalg.solve(A.todense(), b)),
+                               rtol=1e-10, atol=1e-10)

@@ -11,6 +11,7 @@ import pytest
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
+@pytest.mark.known_failing
 def test_mini_multipod_dryrun():
     src = textwrap.dedent("""
         import os
