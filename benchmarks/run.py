@@ -39,7 +39,8 @@ def main() -> None:
             args.full, smoke=args.smoke)))
     if only is None or "table4" in only:
         from . import table4_distributed
-        suites.append(("table4", table4_distributed.run))
+        suites.append(("table4", lambda: table4_distributed.run(
+            args.full, smoke=args.smoke)))
     if only is None or "fig2" in only:
         from . import fig2_adjoint_vs_naive
         suites.append(("fig2", fig2_adjoint_vs_naive.run))

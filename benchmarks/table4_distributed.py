@@ -4,7 +4,10 @@ here: 8 forced host devices, CPU-scaled DOF, 200-iteration budget).
 
 Reports time, per-shard memory estimate, residual-after-budget — plus the
 pipelined-CG variant (beyond-paper: one fused reduction/iteration) and the
-halo-byte count per iteration.  Runs in a subprocess so the parent keeps its
+halo-byte count per iteration.  PR 3 adds the plan-engine columns: analyze
+count and setup reuse across a 3-solve tolerance sweep (``PLAN_STATS``) and
+the setup-amortization ratio (first solve incl. analyze+setup vs steady-state
+re-solve on the cached plan).  Runs in a subprocess so the parent keeps its
 single-device view."""
 import os
 import subprocess
@@ -17,12 +20,16 @@ SRC = textwrap.dedent("""
     import time
     import jax, numpy as np, jax.numpy as jnp
     jax.config.update("jax_enable_x64", True)
+    from repro.core import PLAN_STATS, reset_plan_stats
     from repro.core.distributed import DSparseTensor
     from repro.data.poisson import poisson2d
 
-    mesh = jax.make_mesh((8,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
-    for ng in (64, 128, 256):
+    SMOKE = bool(int("%(smoke)d"))
+    grids = (48, 96) if SMOKE else (64, 128, 256)
+    budget = 100 if SMOKE else 200
+
+    mesh = jax.make_mesh((8,), ("data",))
+    for ng in grids:
         n = ng * ng
         A = poisson2d(ng, dtype=np.float64)
         D = DSparseTensor.from_global(np.asarray(A.val), np.asarray(A.row),
@@ -30,7 +37,7 @@ SRC = textwrap.dedent("""
         b = D.stack_vector(np.ones(n))
         for pipelined in (False, True):
             solve = jax.jit(lambda bb: D.solve(bb, tol=0.0, atol=1e-300,
-                                               maxiter=200,
+                                               maxiter=budget,
                                                pipelined=pipelined))
             jax.block_until_ready(solve(b))
             t0 = time.perf_counter()
@@ -44,24 +51,47 @@ SRC = textwrap.dedent("""
             shard_mem = (D.meta.nnz_loc * 16 + 6 * D.meta.n_loc * 8)
             halo = (D.meta.h_lo + D.meta.h_hi) * 8
             tag = "pipelined" if pipelined else "standard"
-            print(f"ROW,table4/{tag}/dof={n},{dt/200*1e6:.1f},"
+            print(f"ROW,table4/{tag}/dof={n},{dt/budget*1e6:.1f},"
                   f"residual_after_budget={res:.1e};"
                   f"mem_per_shard={shard_mem/2**20:.2f}MiB;"
-                  f"halo_bytes_per_iter={halo};dof_per_s={n*200/dt:.2e}")
+                  f"halo_bytes_per_iter={halo};dof_per_s={n*budget/dt:.2e}")
+
+        # plan-engine amortization: cold first solve (analyze + setup) vs
+        # steady-state re-solves on the cached plan, counters proving the
+        # tolerance sweep analyzes once and reuses the per-values setup
+        Dp = DSparseTensor.from_global(np.asarray(A.val), np.asarray(A.row),
+                                       np.asarray(A.col), A.shape, mesh)
+        reset_plan_stats()
+        t0 = time.perf_counter()
+        jax.block_until_ready(Dp.solve(b, tol=1e-8, maxiter=budget))
+        t_first = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        for tol in (1e-6, 1e-8):
+            jax.block_until_ready(Dp.solve(b, tol=tol, maxiter=budget))
+        t_steady = (time.perf_counter() - t0) / 2
+        print(f"ROW,table4/plan/dof={n},{t_steady*1e6:.1f},"
+              f"analyze={PLAN_STATS['analyze']};"
+              f"setup_reuse={PLAN_STATS['setup_reuse']};"
+              f"cache_hit={PLAN_STATS['cache_hit']};"
+              f"amortization=x{t_first/max(t_steady,1e-9):.1f};"
+              f"t_first_us={t_first*1e6:.1f}")
 """)
 
 
-def run():
+def run(full: bool = False, smoke: bool = False):
     env = dict(os.environ,
                XLA_FLAGS="--xla_force_host_platform_device_count=8",
                PYTHONPATH=os.path.join(REPO, "src"))
-    proc = subprocess.run([sys.executable, "-c", SRC], capture_output=True,
+    src = SRC % {"smoke": 1 if smoke else 0}
+    proc = subprocess.run([sys.executable, "-c", src], capture_output=True,
                           text=True, env=env, timeout=1200)
     if proc.returncode != 0:
-        return [f"table4/ERROR,0,{proc.stderr[-300:]}"]
+        # raise so benchmarks.run counts the suite as failed and exits
+        # nonzero — the bench-smoke CI gate must go red, not print a row
+        raise RuntimeError(f"table4 subprocess failed: {proc.stderr[-300:]}")
     return [line[4:] for line in proc.stdout.splitlines()
             if line.startswith("ROW,")]
 
 
 if __name__ == "__main__":
-    print("\n".join(run()))
+    print("\n".join(run(smoke="--smoke" in sys.argv)))

@@ -16,8 +16,20 @@ from . import solvers, precond
 
 __all__ = [
     "SparseTensor", "SparseTensorList", "coo_matvec", "build_bell",
+    "DSparseTensor", "DSparseTensorList",
     "nonlinear_solve", "sparse_solve", "sparse_eigsh",
     "SolverConfig", "SolverPlan", "get_plan", "make_config",
     "select_backend", "register_backend", "PLAN_STATS", "reset_plan_stats",
     "solvers", "precond",
 ]
+
+_LAZY = {"DSparseTensor": "distributed", "DSparseTensorList": "distributed"}
+
+
+def __getattr__(name):
+    """Lazy re-export of the distributed layer (PEP 562): plain
+    single-device imports never pay the shard_map/mesh import cost."""
+    if name in _LAZY:
+        from importlib import import_module
+        return getattr(import_module(f".{_LAZY[name]}", __name__), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

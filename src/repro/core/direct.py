@@ -55,6 +55,7 @@ from jax import lax
 
 __all__ = [
     "DirectArtifacts", "symbolic_factor", "numeric_factor", "factored_solve",
+    "SchwarzArtifacts", "schwarz_symbolic", "schwarz_numeric",
 ]
 
 
@@ -409,6 +410,81 @@ def _symbolic_factor(row, col, n: int, ordering: str,
         perm=jnp.asarray(perm, jnp.int32), ipos=jnp.asarray(ipos, jnp.int32),
         a2f=jnp.asarray(a2f, jnp.int32),
         factor=factor, row_sweep=row_sweep, col_sweep=col_sweep, stats=stats)
+
+
+# ---------------------------------------------------------------------------
+# shard-local factorization (the distributed plan engine's Schwarz stage)
+# ---------------------------------------------------------------------------
+
+class SchwarzArtifacts(NamedTuple):
+    """Product of :func:`schwarz_symbolic` — ONE union-pattern symbolic
+    factorization shared by every shard, plus the per-shard numeric assembly
+    programs.  Everything is pattern-only; the numeric half is a plain
+    ``vmap(numeric_factor)`` over per-shard values at setup time."""
+    art: DirectArtifacts     # ILU(0)/IC(0) program on the union pattern
+    nnz_u: int               # union-pattern nonzeros
+    src: jax.Array           # (P, m) gather into flat values (+zero slot last)
+    dst: jax.Array           # (P, m) scatter into union slots (pads → nnz_u)
+    diag_fix: jax.Array      # (P, nnz_u) +1.0 on structurally-absent diagonals
+
+
+def schwarz_symbolic(entries, n_ext: int, n_src: int) -> SchwarzArtifacts:
+    """Analyze shard-local extended matrices for overlapping Schwarz.
+
+    ``entries[q]`` lists shard ``q``'s extended-domain matrix as
+    ``(rows, cols, srcs)`` — COO coordinates in ``[0, n_ext)`` plus the flat
+    index of each entry's value in the global value storage (length
+    ``n_src``; a trailing zero slot is appended at gather time).  The
+    extended matrices of all shards are unioned into ONE sparsity pattern so
+    a single zero-fill (ILU(0)/IC(0)) step program — built by
+    :func:`symbolic_factor` — serves every shard under ``vmap``/``shard_map``:
+    per-shard numeric values are scattered into union slots, structurally
+    absent diagonals (phantom halos of edge shards, padded tail rows) are
+    completed with 1.0 identity pivots, and entries another shard has but
+    this one lacks stay numerically zero.
+    """
+    p = len(entries)
+    keys = [r.astype(np.int64) * n_ext + c.astype(np.int64)
+            for r, c, _ in entries]
+    dkeys = np.arange(n_ext, dtype=np.int64) * (n_ext + 1)
+    ukeys = np.unique(np.concatenate(keys + [dkeys]))
+    nnz_u = int(ukeys.size)
+    urow = (ukeys // n_ext).astype(np.int64)
+    ucol = (ukeys % n_ext).astype(np.int64)
+
+    m = max(max((k.size for k in keys), default=1), 1)
+    src = np.full((p, m), n_src, dtype=np.int64)        # pads → zero slot
+    dst = np.full((p, m), nnz_u, dtype=np.int64)        # pads → dump slot
+    diag_fix = np.ones((p, nnz_u), dtype=np.float64)
+    dslot = np.searchsorted(ukeys, dkeys)
+    for q, (k, (_, _, s)) in enumerate(zip(keys, entries)):
+        slot = np.searchsorted(ukeys, k)
+        src[q, :k.size] = np.asarray(s, np.int64)
+        dst[q, :k.size] = slot
+        diag_fix[q] = 0.0
+        have = np.zeros(nnz_u, bool)
+        have[slot] = True
+        diag_fix[q, dslot[~have[dslot]]] = 1.0          # identity completion
+
+    art = symbolic_factor(urow, ucol, n_ext, incomplete=True)
+    return SchwarzArtifacts(art=art, nnz_u=nnz_u,
+                            src=jnp.asarray(src, jnp.int32),
+                            dst=jnp.asarray(dst, jnp.int32),
+                            diag_fix=jnp.asarray(diag_fix))
+
+
+def schwarz_numeric(sch: SchwarzArtifacts, flat_val: jax.Array) -> jax.Array:
+    """Traced-safe numeric half: assemble every shard's extended matrix from
+    the flat global values and refactorize — ``(P, nnzF + 2)`` stacked
+    factors, one per shard (the setup stage of ``precond='schwarz'``)."""
+    padded = jnp.concatenate([flat_val, jnp.zeros((1,), flat_val.dtype)])
+
+    def one_shard(src_q, dst_q, fix_q):
+        v = jnp.zeros(sch.nnz_u + 1, flat_val.dtype).at[dst_q].add(
+            padded[src_q])[:-1]
+        return numeric_factor(sch.art, v + fix_q.astype(flat_val.dtype))
+
+    return jax.vmap(one_shard)(sch.src, sch.dst, sch.diag_fix)
 
 
 # ---------------------------------------------------------------------------

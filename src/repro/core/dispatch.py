@@ -85,6 +85,7 @@ PLAN_STATS: Dict[str, int] = {
     "cache_hit": 0,        # plan served from a SparseTensor's plan cache
     "cache_miss": 0,       # plan analyzed fresh
     "transpose_shared": 0,  # adjoint reused the forward plan (or its factors)
+    "t_partition": 0,      # distributed Aᵀ partitions built (once per plan)
 }
 
 
@@ -299,9 +300,17 @@ class DirectBackend(Backend):
 
 
 class IterativeBackend(Backend):
-    """Shared machinery for Krylov backends: kernel matvec + preconditioner."""
+    """Shared machinery for Krylov backends: kernel matvec + preconditioner.
+
+    ``cache_setup``: the preconditioner refresh (block inverses, Lanczos
+    spectrum bounds, ILU refactorization, MG hierarchy) is memoized per
+    values array exactly like the direct backend's numeric factorization —
+    a tolerance sweep or the symmetric adjoint backward re-traces nothing
+    (``PLAN_STATS['setup_reuse']``); new values still refresh.
+    """
     kernel = "coo"
     methods = ("cg", "bicgstab", "gmres")
+    cache_setup = True
 
     def analyze(self, cfg, pattern):
         return {"precond": _precond.PreconditionerPlan(
@@ -352,6 +361,50 @@ class StencilBackend(IterativeBackend):
         return A.stencil is not None
 
 
+class DistBackend(Backend):
+    """Distributed mesh backend (paper §3.3) — ``DSparseTensor`` as a
+    first-class citizen of the plan engine.
+
+    ``analyze`` runs ONCE per (global pattern, mesh, partition) and freezes
+    everything eager: partition bounds, the halo program (axis size +
+    ppermute perms), the Aᵀ partition for non-symmetric adjoints
+    (``PLAN_STATS['t_partition']``), and a
+    :class:`~repro.core.precond.DistPreconditionerPlan` (``jacobi`` or
+    shard-local overlapping-Schwarz ``schwarz`` sharing the direct
+    machinery's ILU(0)/IC(0) programs).  ``setup`` is the traced-safe
+    preconditioner refresh on the stacked values, memoized per values array
+    (``cache_setup``); ``solve`` is the shard_map'd Krylov loop.  The heavy
+    lifting lives in :mod:`repro.core.distributed` (imported lazily: that
+    module imports this registry at module level, so the cycle must break
+    here — and plain single-device use never loads the mesh machinery)."""
+    name = "dist"
+    methods = ("cg", "bicgstab", "pipelined_cg")
+    handles_batch = True        # (P, n_loc) stacking is sharding, not batch
+    cache_setup = True
+
+    def applicable(self, A):
+        return getattr(A, "mesh", None) is not None
+
+    def default_method(self, A):
+        return "cg" if A.props.get("symmetric", False) else "bicgstab"
+
+    def analyze(self, cfg, pattern):
+        from . import distributed as _dist
+        return _dist.dist_analyze(cfg, pattern)
+
+    def setup(self, plan, A):
+        from . import distributed as _dist
+        return _dist.dist_setup(plan, A)
+
+    def solve(self, plan, state, A, b, x0, cfg):
+        from . import distributed as _dist
+        return _dist.dist_solve(plan, state, A, b, x0, cfg)
+
+    def transpose_plan(self, plan):
+        from . import distributed as _dist
+        return _dist.dist_transpose_plan(plan)
+
+
 class _FnBackend(Backend):
     """Adapter for legacy ``register_backend(name, solve_fn, applicable)``."""
     handles_batch = True
@@ -370,7 +423,7 @@ class _FnBackend(Backend):
 
 BACKENDS: Dict[str, Backend] = {
     b.name: b for b in (DenseBackend(), DirectBackend(), JnpBackend(),
-                        PallasBackend(), StencilBackend())}
+                        PallasBackend(), StencilBackend(), DistBackend())}
 
 
 def register_backend(name: str, solve_fn: Optional[Callable] = None,
@@ -439,7 +492,14 @@ class SolverPlan:
     properties, kernel layouts, and the backend's analyze artifacts — never
     values, so one plan serves every ``with_values`` refresh, every element
     of a shared-pattern batch, and the adjoint solve of ``jax.grad``.
+
+    Mesh-aware: for distributed tensors the plan additionally freezes the
+    ``Mesh`` and ``DistMeta`` (``mesh``/``dmeta``) so the ``dist`` backend's
+    stages never re-derive partition state; single-device plans carry None.
     """
+
+    mesh = None          # jax.sharding.Mesh for dist-backed plans
+    dmeta = None         # repro.core.distributed.DistMeta for dist plans
 
     def __init__(self, cfg: SolverConfig, A: SparseTensor,
                  cache: Optional[dict] = None):
@@ -456,25 +516,37 @@ class SolverPlan:
         self.props = dict(A.props)
         self.bell = A.bell
         self.stencil = A.stencil
+        self.mesh = getattr(A, "mesh", None)
+        self.dmeta = getattr(A, "meta", None)
         self._cache = cache if cache is not None else {cfg.plan_key(): self}
         self._tplan: Optional["SolverPlan"] = None
         self._setup_memo: dict = {}
         PLAN_STATS["analyze"] += 1
-        self.artifacts = self.backend.analyze(cfg, self)
+        # analyze is eager BY CONTRACT: plans outlive any single trace, so
+        # artifact arrays built here must be concrete even when the first
+        # solve happens inside jit/grad — a traced constant stored on the
+        # plan would leak into (and break) every later trace
+        with jax.ensure_compile_time_eval():
+            self.artifacts = self.backend.analyze(cfg, self)
 
     # -- stage ❷: values-dependent setup (traced-safe) ----------------------
     def setup(self, A: SparseTensor):
         """Run (or reuse) the backend's values-dependent setup.
 
         Backends with ``cache_setup`` (the direct backend's numeric
-        factorization) memoize the state per values *array*: a tolerance
-        sweep, a continuation loop, and the adjoint backward all reuse ONE
-        factorization — identity of ``A.val`` is the key, which holds across
-        custom_vjp forward/backward in both eager and jit traces.  The memo
-        is single-slot (latest values win), shared with the transpose plan
-        (so Aᵀ solves never refactorize), and holds the values array weakly:
-        a dead array can never produce a hit, and dropping the entry when it
-        dies keeps tracer-valued states from outliving their trace."""
+        factorization, the iterative preconditioner refresh, the distributed
+        backend) memoize the state per values *array*: a tolerance sweep, a
+        continuation loop, and the adjoint backward all reuse ONE setup —
+        identity of ``A.val`` is the key, which holds across custom_vjp
+        forward/backward in both eager and jit traces.  The memo is
+        single-slot (latest values win), shared with the transpose plan
+        where that is sound (direct: Aᵀ solves never refactorize), and holds
+        the values array weakly: a dead array can never produce a hit, so a
+        stale entry is harmless.  The weak eviction only actually fires when
+        the state does not itself capture the values array (direct factors);
+        iterative states close over ``A.val`` through their matvec, pinning
+        the LATEST values array (or trace tracer) per plan until the next
+        setup replaces it — a bounded, single-slot residency."""
         if self.backend.cache_setup:
             hit = self._setup_memo.get("state")
             if hit is not None and hit[0]() is A.val:
@@ -484,9 +556,17 @@ class SolverPlan:
         state = self.backend.setup(self, A)
         if self.backend.cache_setup:
             memo = self._setup_memo
-            memo["state"] = (
-                weakref.ref(A.val, lambda _, m=memo: m.pop("state", None)),
-                state)
+            box = {}
+
+            def _drop(_, m=memo, b=box):
+                # evict ONLY our own entry: a dead values array must not pop
+                # a successor that already replaced it (the old entry's ref
+                # can die between the successor's fwd store and bwd lookup)
+                if m.get("state") is b.get("entry"):
+                    m.pop("state", None)
+
+            box["entry"] = (weakref.ref(A.val, _drop), state)
+            memo["state"] = box["entry"]
         return state
 
     # -- stage ❸: solve ------------------------------------------------------
@@ -626,7 +706,8 @@ def get_plan(A: SparseTensor, cfg: Optional[SolverConfig] = None,
             A._plans = cache
         except AttributeError:
             pass
-    key = cfg.plan_key()
+    extra = getattr(A, "plan_key_extra", None)
+    key = cfg.plan_key() + (tuple(extra()) if extra is not None else ())
     plan = cache.get(key)
     if plan is not None:
         PLAN_STATS["cache_hit"] += 1

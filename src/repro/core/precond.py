@@ -36,11 +36,12 @@ import numpy as np
 
 __all__ = [
     "identity", "jacobi", "block_jacobi", "chebyshev",
-    "PreconditionerPlan", "make_preconditioner",
+    "PreconditionerPlan", "DistPreconditionerPlan", "make_preconditioner",
 ]
 
 PRECONDITIONERS = ("none", "identity", "jacobi", "block_jacobi", "chebyshev",
                    "mg", "ilu")
+DIST_PRECONDITIONERS = ("none", "identity", "jacobi", "schwarz")
 
 
 def identity():
@@ -215,6 +216,114 @@ class PreconditionerPlan:
             C = _direct.numeric_factor(art, A.val)   # traced-safe refactorize
             return lambda r: _direct.factored_solve(art, C, r)
         raise ValueError(f"unknown preconditioner {self.name!r}")
+
+
+class DistPreconditionerPlan:
+    """Distributed preconditioner, split like :class:`PreconditionerPlan`:
+    eager ``build(pattern)`` in ``__init__`` + traced ``refresh(values)``.
+
+    Operates on the stacked ``(P, ·)`` storage of a ``DSparseTensor``.  The
+    build stage only sees the pattern (stacked local row/col indices +
+    ``DistMeta``) and precomputes every values-free artifact eagerly:
+
+    * ``jacobi`` — the per-shard diagonal-entry mask (padding excluded via
+      ``meta.shard_nnz``), so ``refresh`` is a single masked ``segment_sum``.
+    * ``schwarz`` — shard-local overlapping Schwarz: each shard's extended
+      matrix ``A[ext, ext]`` (owned rows ∪ halo-overlap rows, Dirichlet
+      truncation at the extended boundary — a principal submatrix, so SPD
+      inputs stay SPD) is analyzed ONCE through the direct machinery's
+      union-pattern ILU(0)/IC(0) program (:func:`repro.core.direct.
+      schwarz_symbolic`); ``refresh`` is a vmapped numeric refactorization,
+      and the per-iteration apply is gather-halos → local triangular sweeps →
+      transposed-halo combine (Σ Rᵀ A_ext⁻¹ R — the additive-Schwarz sum).
+
+    ``refresh(lval)`` returns a tuple of stacked state arrays (leading dim
+    P) that the solve stage ships through ``shard_map``; ``local_closure``
+    turns the per-shard slice of that state into the apply closure used
+    inside the Krylov loop.  Halo application is injected by the caller
+    (``halo_fwd``/``halo_bwd``) so this module stays mesh-agnostic.
+    """
+
+    def __init__(self, name: Optional[str], lrow, lcol, meta, *,
+                 bounds=None):
+        self.name = "none" if name in (None, "none", "identity") else name
+        if self.name not in DIST_PRECONDITIONERS:
+            raise ValueError(
+                f"unknown distributed preconditioner {name!r} "
+                f"(supported: {DIST_PRECONDITIONERS})")
+        self.meta = meta
+        lr = np.asarray(lrow)
+        lc = np.asarray(lcol)
+        p, nnz_loc = lr.shape
+        valid = np.ones((p, nnz_loc), bool)
+        if meta.shard_nnz is not None:
+            valid = np.arange(nnz_loc)[None, :] < \
+                np.asarray(meta.shard_nnz)[:, None]
+        if self.name == "jacobi":
+            self._diag_mask = jnp.asarray(
+                (lr + meta.h_lo == lc) & valid)
+            self._lrow = jnp.asarray(lr, jnp.int32)
+        if self.name == "schwarz":
+            from . import direct as _direct
+            from .distributed import global_entries
+            if bounds is None:
+                raise ValueError("schwarz build needs partition bounds")
+            h_lo, h_hi, n_loc = meta.h_lo, meta.h_hi, meta.n_loc
+            n_ext = h_lo + n_loc + h_hi
+            # global entry list (shard-major) + each entry's flat value slot
+            row_g, col_g, fa = global_entries(lr, lc, meta, bounds)
+            # each shard's extended window [bounds[q]-h_lo, bounds[q+1]+h_hi)
+            # in local extended coordinates — overlap rows included, entries
+            # leaving the window dropped (Dirichlet truncation)
+            entries = []
+            for q in range(p):
+                lo = bounds[q] - h_lo
+                hi = bounds[q] + n_loc + h_hi     # uniform n_ext window
+                m = ((row_g >= lo) & (row_g < hi) &
+                     (col_g >= lo) & (col_g < hi))
+                entries.append((row_g[m] - lo, col_g[m] - lo, fa[m]))
+            self._schwarz = _direct.schwarz_symbolic(
+                entries, n_ext, n_src=p * nnz_loc)
+
+    def refresh(self, lval) -> tuple:
+        """values-dependent stage — traced-safe; returns stacked state."""
+        if self.name == "none":
+            return ()
+        if self.name == "jacobi":
+            n_loc = self.meta.n_loc
+
+            def one(v, m_, r):
+                d = jax.ops.segment_sum(jnp.where(m_, v, 0.0), r,
+                                        num_segments=n_loc)
+                return jnp.where(jnp.abs(d) > 1e-30, 1.0 / d, 1.0)
+
+            return (jax.vmap(one)(lval, self._diag_mask, self._lrow),)
+        if self.name == "schwarz":
+            from . import direct as _direct
+            return (_direct.schwarz_numeric(self._schwarz,
+                                            lval.reshape(-1)),)
+        raise ValueError(f"unknown distributed preconditioner {self.name!r}")
+
+    def local_closure(self, state_q, halo_fwd: Callable,
+                      halo_bwd: Callable) -> Callable:
+        """Per-shard apply closure (inside ``shard_map``; state pre-sliced)."""
+        if self.name == "none":
+            return identity()
+        if self.name == "jacobi":
+            (inv,) = state_q
+            return lambda r: inv * r
+        if self.name == "schwarz":
+            from . import direct as _direct
+            (C,) = state_q
+            art = self._schwarz.art
+
+            def apply(r):
+                r_ext = halo_fwd(r)
+                z_ext = _direct.factored_solve(art, C, r_ext)
+                return halo_bwd(z_ext)     # Σ Rᵀ A_ext⁻¹ R: overlap summed
+
+            return apply
+        raise ValueError(f"unknown distributed preconditioner {self.name!r}")
 
 
 def make_preconditioner(name: str, A, matvec: Callable):

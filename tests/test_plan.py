@@ -143,6 +143,40 @@ def test_plan_api_stages(A):
     assert plan.transpose() is plan     # symmetric pattern
 
 
+def test_iterative_setup_memoized_per_values(A):
+    """PR-2 leftover closed: the iterative backends memoize setup(values)
+    per values array like the direct backend — a tolerance sweep refreshes
+    the preconditioner ONCE, new values still refresh."""
+    b = jnp.ones(A.shape[0])
+    reset_plan_stats()
+    for tol in (1e-4, 1e-8, 1e-12):
+        A.solve(b, backend="jnp", method="cg", tol=tol)
+    assert PLAN_STATS["setup"] == 1, PLAN_STATS
+    assert PLAN_STATS["setup_reuse"] == 2, PLAN_STATS
+    # a with_values refresh is NOT served from the memo (different array)
+    A.with_values(A.val * 2.0).solve(b, backend="jnp", method="cg", tol=1e-8)
+    assert PLAN_STATS["setup"] == 2, PLAN_STATS
+    # and the sweep honored the tightest tolerance despite the shared state
+    x = A.solve(b, backend="jnp", method="cg", tol=1e-12)
+    assert float(jnp.linalg.norm(A @ x - b)) < 1e-9
+
+
+def test_symmetric_backward_reuses_iterative_setup(A):
+    """The adjoint of a symmetric iterative solve hits the per-values memo:
+    forward and backward share one preconditioner refresh."""
+    b = jnp.ones(A.shape[0])
+
+    def loss(val):
+        x = A.with_values(val).solve(b, backend="jnp", method="cg",
+                                     tol=1e-13, precond="block_jacobi")
+        return jnp.sum(x ** 2)
+
+    reset_plan_stats()
+    jax.grad(loss)(A.val)
+    assert PLAN_STATS["setup"] == 1, PLAN_STATS
+    assert PLAN_STATS["setup_reuse"] >= 1, PLAN_STATS
+
+
 # ---------------------------------------------------------------------------
 # gradients: forward-vs-adjoint plan reuse must not change the math
 # ---------------------------------------------------------------------------
