@@ -69,6 +69,30 @@ def run(full: bool = False, smoke: bool = False):
             jax.jit(lambda val, bb: sparse_solve_with_info(
                 cfg_k, Ak.with_values(val), bb)), Ak.val, b)
         entries["cg_stencil"] = (t, float(info.resnorm))
+        # preconditioner ladder on the SAME operator: iterations + time for
+        # jacobi / ilu / geometric mg (stencil) / algebraic amg (COO) — the
+        # PR-4 rows; analyze cost is paid once before timing (plan cached).
+        # Capped like the direct rows: the eager ILU/AMG symbolic pass is
+        # python-loop-bound, so the biggest ladder rungs skip it.
+        if n <= 2 * DIRECT_BUDGET:
+            for pname, At, cfg_p in (
+                    ("jacobi", A, cfg_cg),
+                    ("ilu", A, make_config(A, backend="jnp", method="cg",
+                                           tol=1e-7, maxiter=20000,
+                                           precond="ilu")),
+                    ("mg", Ak, make_config(Ak, backend="stencil",
+                                           method="cg", tol=1e-7,
+                                           maxiter=20000, precond="mg")),
+                    ("amg", A, make_config(A, backend="jnp", method="cg",
+                                           tol=1e-7, maxiter=20000,
+                                           precond="amg"))):
+                get_plan(At, cfg_p)        # symbolic analysis (once, eager)
+                t, (x, info) = timeit(
+                    jax.jit(lambda val, bb, At=At, cfg_p=cfg_p:
+                            sparse_solve_with_info(
+                                cfg_p, At.with_values(val), bb)), At.val, b)
+                entries[f"precond_{pname}"] = (t, float(info.resnorm),
+                                               f"iters={int(info.iters)}")
 
         mem = mem_estimate_bytes(n, A.nnz)
         for name, entry in entries.items():

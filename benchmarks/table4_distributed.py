@@ -56,6 +56,23 @@ SRC = textwrap.dedent("""
                   f"mem_per_shard={shard_mem/2**20:.2f}MiB;"
                   f"halo_bytes_per_iter={halo};dof_per_s={n*budget/dt:.2e}")
 
+        # Schwarz ladder (PR 4): one-level vs two-level (deflated coarse
+        # correction on cached direct factors) — iterations + per-solve time
+        # at a fixed tolerance; the coarse solve must BUY its extra
+        # all_gather per iteration with fewer iterations
+        bsz = D.stack_vector(np.random.default_rng(3).normal(size=n))
+        for pname in ("jacobi", "schwarz", "schwarz2"):
+            solve = jax.jit(lambda lv, bb, pname=pname: D.with_values(lv)
+                            .solve_with_info(bb, tol=1e-8, maxiter=4000,
+                                             precond=pname))
+            jax.block_until_ready(solve(D.lval, bsz))  # warm (incl. analyze)
+            t0 = time.perf_counter()
+            x, info = solve(D.lval, bsz)
+            jax.block_until_ready(x)
+            dt = time.perf_counter() - t0
+            print(f"ROW,table4/{pname}/dof={n},{dt*1e6:.1f},"
+                  f"iters={int(info.iters)};converged={bool(info.converged)}")
+
         # plan-engine amortization: cold first solve (analyze + setup) vs
         # steady-state re-solves on the cached plan, counters proving the
         # tolerance sweep analyzes once and reuses the per-values setup

@@ -57,10 +57,16 @@ print("grad through distributed solve:", g.shape,
       bool(jnp.all(jnp.isfinite(g))))
 
 # shard-local overlapping Schwarz (ILU(0) subdomain solves reusing the
-# direct backend's symbolic machinery) vs point Jacobi
+# direct backend's symbolic machinery) vs point Jacobi — and the two-level
+# variant: precond="schwarz2" adds a symmetric deflated coarse correction
+# (the global pattern aggregated by the AMG machinery, its Galerkin matrix
+# factored once through core/direct.py) so iteration counts stay flat as
+# the shard count grows
 _, ij = D.solve_with_info(b, tol=1e-8, maxiter=5000)
 _, isz = D.solve_with_info(b, tol=1e-8, maxiter=5000, precond="schwarz")
-print(f"CG iterations   jacobi={int(ij.iters)}  schwarz={int(isz.iters)}")
+_, is2 = D.solve_with_info(b, tol=1e-8, maxiter=5000, precond="schwarz2")
+print(f"CG iterations   jacobi={int(ij.iters)}  schwarz={int(isz.iters)}"
+      f"  schwarz2={int(is2.iters)}")
 
 # pipelined CG (beyond-paper): one fused reduction per iteration
 xp = D.solve(b, tol=1e-10, maxiter=5000, pipelined=True)

@@ -491,24 +491,90 @@ def schwarz_numeric(sch: SchwarzArtifacts, flat_val: jax.Array) -> jax.Array:
 # numeric factorization (traced-safe — the setup stage)
 # ---------------------------------------------------------------------------
 
-def numeric_factor(art: DirectArtifacts, val: jax.Array) -> jax.Array:
+def numeric_factor(art: DirectArtifacts, val: jax.Array, *,
+                   pivot_guard: bool = True,
+                   pivot_eps: Optional[float] = None) -> jax.Array:
     """Numeric LU/LDLᵀ over the precomputed fill pattern.
 
     One ``lax.scan`` over the packed step program: pure gather/scatter with
     uniform shapes, so it compiles once, jits, and vmaps over a leading batch
     dimension of ``val`` (shared-pattern batches).  Duplicate COO entries
     accumulate, matching ``coo_matvec`` semantics.
+
+    ``pivot_guard`` (default on): a structurally-present but numerically-
+    (near-)zero pivot would silently turn the whole factorization into NaNs
+    — no numerical pivoting is performed.  The guard applies a *static
+    diagonal perturbation* at divide time instead: any pivot with
+    ``|d| < τ`` (τ = ``pivot_eps`` or ``√eps·max|A|``) is replaced by
+    ``±τ``, persisted in the factor storage so the triangular sweeps stay
+    consistent, and — when the values are concrete (not inside a trace) —
+    reported with a ``UserWarning``.  The perturbed factorization solves a
+    nearby matrix; proper Bunch–Kaufman pivoting for indefinite systems
+    remains a ROADMAP follow-up (this is the documented stopgap).
     """
+    scale = jnp.max(jnp.abs(val))
+    tau = jnp.asarray(
+        pivot_eps if pivot_eps is not None
+        else jnp.sqrt(jnp.finfo(val.dtype).eps) * jnp.maximum(scale, 1e-300),
+        val.dtype)
     C = jnp.zeros(art.nnzF + 2, dtype=val.dtype)
     C = C.at[art.a2f].add(val).at[art.nnzF + 1].set(1.0)
 
-    def step(C, xs):
+    if not pivot_guard:
+        def step(C, xs):
+            fl, fpv, s1, s2, dst = xs
+            C = C.at[fl].set(C[fl] / C[fpv])
+            C = C.at[dst].add(-C[s1] * C[s2])
+            return C, None
+
+        C, _ = lax.scan(step, C, tuple(art.factor))
+        return C
+
+    # perturbation BOOKKEEPING (for the warning) only runs when the values
+    # are concrete — its sole consumer is the eager warning, which can never
+    # fire under jit/vmap, so traced factorizations keep the lean scan body
+    # (the safe-pivot clamp itself is always on)
+    track = not isinstance(val, jax.core.Tracer)
+
+    def clamp(C, fpv):
+        piv = C[fpv]
+        bad = jnp.abs(piv) < tau            # pads divide by scratch 1.0 — ok
+        safe = jnp.where(bad, jnp.where(piv >= 0, tau, -tau), piv)
+        return C.at[fpv].set(safe), bad     # persist: sweeps see the same d
+
+    if not track:
+        def step(C, xs):
+            fl, fpv, s1, s2, dst = xs
+            C, _ = clamp(C, fpv)
+            C = C.at[fl].set(C[fl] / C[fpv])
+            C = C.at[dst].add(-C[s1] * C[s2])
+            return C, None
+
+        C, _ = lax.scan(step, C, tuple(art.factor))
+        return C
+
+    pert0 = jnp.zeros(art.nnzF + 2, dtype=bool)
+
+    def step(carry, xs):
+        C, pert = carry
         fl, fpv, s1, s2, dst = xs
+        C, bad = clamp(C, fpv)
+        pert = pert.at[fpv].max(bad)
         C = C.at[fl].set(C[fl] / C[fpv])
         C = C.at[dst].add(-C[s1] * C[s2])
-        return C, None
+        return (C, pert), None
 
-    C, _ = lax.scan(step, C, tuple(art.factor))
+    (C, pert), _ = lax.scan(step, (C, pert0), tuple(art.factor))
+    if not isinstance(pert, jax.core.Tracer):
+        n_bad = int(jnp.sum(pert[:art.n]))
+        if n_bad:
+            import warnings
+            warnings.warn(
+                f"numeric factorization hit {n_bad} numerically-zero "
+                f"pivot(s); applied a scaled diagonal perturbation "
+                f"(|d|<{float(tau):.2e} -> ±{float(tau):.2e}). The factors "
+                f"solve a nearby matrix — consider an iterative backend or "
+                f"a symmetric shift for indefinite systems.")
     return C
 
 

@@ -31,7 +31,10 @@ Every solve goes through a three-stage split::
 ❶ ``analyze`` runs ONCE per (sparsity pattern, backend/method/precond): it
 picks the backend class, freezes the kernel layout (block-ELL / stencil
 metadata), and builds the pattern-level half of the preconditioner
-(:class:`repro.core.precond.PreconditionerPlan`).  Plans are cached on the
+(:class:`repro.core.precond.PreconditionerPlan` — for ``precond="amg"``
+that includes the smoothed-aggregation coarsening and the packed Galerkin
+index programs of :mod:`repro.core.multigrid`, counted by
+``PLAN_STATS["coarsen"]``/``["galerkin"]``).  Plans are cached on the
 ``SparseTensor`` keyed by ``SolverConfig.plan_key()`` — solve-loop knobs
 (tol/atol/maxiter/restart) are NOT part of the key, so a tolerance sweep or
 continuation loop reuses one plan — and the cache dict is *shared* by
@@ -86,6 +89,8 @@ PLAN_STATS: Dict[str, int] = {
     "cache_miss": 0,       # plan analyzed fresh
     "transpose_shared": 0,  # adjoint reused the forward plan (or its factors)
     "t_partition": 0,      # distributed Aᵀ partitions built (once per plan)
+    "coarsen": 0,          # AMG pattern coarsenings (symbolic, once/pattern)
+    "galerkin": 0,         # AMG numeric Galerkin products (once/values array)
 }
 
 
@@ -360,6 +365,71 @@ class StencilBackend(IterativeBackend):
     def applicable(self, A):
         return A.stencil is not None
 
+    def transpose_plan(self, plan):
+        """Adjoint plan that KEEPS the fast stencil kernel (no COO fallback):
+        Aᵀ of a 5-point stencil operator is the same operator with its
+        coupling planes exchanged and shifted (N'↔S, W'↔E, values taken from
+        the neighbour's opposing slot).  The shift is a pure gather frozen at
+        analyze time (``tmap``, with a zero slot for the domain boundary);
+        the transpose plan's setup maps the FORWARD values through it and
+        then runs the ordinary stencil setup — the same kernel, the same
+        preconditioner machinery (``precond='mg'`` included), zero
+        re-analysis."""
+        meta = plan.stencil
+        if meta is None or meta.nx != meta.ny:
+            return None
+        ng = meta.nx
+        if plan.shape != (ng * ng, ng * ng):
+            return None
+        idx = np.arange(5 * ng * ng).reshape(5, ng, ng)
+        zslot = 5 * ng * ng
+        tmap = np.empty_like(idx)
+        tmap[0] = idx[0]                       # C' = C
+        # plane order (C, N, S, W, E), N = coupling to (x-1, y):
+        # Aᵀ[i, i_north] = A[i_north, i] = S-plane at the north neighbour
+        tmap[1, 1:, :] = idx[2, :-1, :]
+        tmap[1, 0, :] = zslot
+        tmap[2, :-1, :] = idx[1, 1:, :]        # S' from N shifted up
+        tmap[2, -1, :] = zslot
+        tmap[3, :, 1:] = idx[4, :, :-1]        # W' from E shifted right
+        tmap[3, :, 0] = zslot
+        tmap[4, :, :-1] = idx[3, :, 1:]        # E' from W shifted left
+        tmap[4, :, -1] = zslot
+
+        tp = SolverPlan.__new__(SolverPlan)
+        tp.cfg = plan.cfg
+        tp.backend = _STENCIL_T
+        # the transposed operator in PLANE layout shares the forward's
+        # pattern arrays (vc_pattern of the same grid): values are remapped,
+        # indices are not — COO and stencil views stay consistent
+        tp.row, tp.col = plan.row, plan.col
+        tp.shape = plan.shape
+        tp.props = dict(plan.props)
+        tp.bell, tp.stencil = None, plan.stencil
+        tp._cache = {tp.cfg.plan_key(): tp}
+        tp._tplan = plan
+        tp._setup_memo = {}        # Aᵀ values differ from the forward values
+        with jax.ensure_compile_time_eval():
+            tp.artifacts = {
+                "tmap": jnp.asarray(tmap.reshape(-1), jnp.int32),
+                "precond": _precond.PreconditionerPlan(
+                    plan.cfg.precond, plan.row, plan.col, plan.shape,
+                    stencil=plan.stencil)}
+        return tp
+
+
+class _StencilTransposeBackend(StencilBackend):
+    """Internal backend of the stencil transpose plan: identical solve path,
+    but setup first remaps the forward values into transposed planes."""
+    name = "stencil"            # reported name matches the forward backend
+
+    def setup(self, plan, A):
+        padded = jnp.concatenate([A.val, jnp.zeros((1,), A.val.dtype)])
+        return super().setup(plan, plan.matrix(padded[plan.artifacts["tmap"]]))
+
+
+_STENCIL_T = _StencilTransposeBackend()
+
 
 class DistBackend(Backend):
     """Distributed mesh backend (paper §3.3) — ``DSparseTensor`` as a
@@ -554,7 +624,17 @@ class SolverPlan:
                 return hit[1]
         PLAN_STATS["setup"] += 1
         state = self.backend.setup(self, A)
-        if self.backend.cache_setup:
+        # memo-poisoning guard: when a CONCRETE values array is set up
+        # inside a staging trace (a jitted solve closing over the matrix),
+        # the state embeds tracers — possibly hidden inside matvec or
+        # preconditioner closures, invisible to any leaf inspection — and
+        # storing it would leak them into the next eager solve.  The probe
+        # asks the ambient trace directly: does an op on a fresh constant
+        # come back traced?  (Eager jax.grad says no — its fwd runs ops on
+        # concrete primals concretely, so that state stays cacheable.)
+        staging = isinstance(jnp.zeros(()) + 0.0, jax.core.Tracer)
+        if self.backend.cache_setup and not (
+                staging and not isinstance(A.val, jax.core.Tracer)):
             memo = self._setup_memo
             box = {}
 

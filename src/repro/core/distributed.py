@@ -435,9 +435,12 @@ class DSparseTensor:
         patterns, a shared-artifact transposed sibling otherwise — plus
         local O(nnz) gradient assembly with halo'd x (paper §3.3).
 
-        ``precond`` ∈ {none, jacobi, schwarz}: ``schwarz`` is shard-local
-        overlapping Schwarz with ILU(0)/IC(0) subdomain solves built on the
-        direct backend's symbolic machinery (:mod:`repro.core.direct`).
+        ``precond`` ∈ {none, jacobi, schwarz, schwarz2}: ``schwarz`` is
+        shard-local overlapping Schwarz with ILU(0)/IC(0) subdomain solves
+        built on the direct backend's symbolic machinery
+        (:mod:`repro.core.direct`); ``schwarz2`` adds an additive coarse
+        correction (aggregated global Galerkin matrix, cached direct
+        factors) so CG iteration counts stay flat as the shard count grows.
         """
         from . import adjoint as _adjoint
         cfg = self._make_config(method=method, tol=tol, atol=atol,
@@ -508,14 +511,17 @@ class DSparseTensor:
         return deig(self.lval)
 
     def slogdet(self):
-        """Gather-and-densify fallback (paper §3.3 'Scope of distributed
+        """Gather-based fallback (paper §3.3 'Scope of distributed
         gradients'): pulls the global matrix onto ONE host, rebuilds a
-        :class:`SparseTensor`, and delegates to its dense slogdet.  O(n²)
-        memory and a full gather — runtime-warned, does not scale, and the
-        host gather breaks gradient flow into the stacked values."""
+        :class:`SparseTensor`, and delegates to its slogdet — which is the
+        sparse cached-LDLᵀ path (Σ log |d_i| with sign tracking, O(nnz_L)
+        memory) for patterns within ``DIRECT_BUDGET`` and the dense O(n²)
+        fallback beyond.  The full gather is runtime-warned either way, and
+        the host round-trip breaks gradient flow into the stacked values."""
         import warnings
         warnings.warn("DSparseTensor.slogdet gathers the global matrix onto "
-                      "one process — O(n²) memory; not distributed-scalable.")
+                      "one process — not distributed-scalable (sparse LDLT "
+                      "within DIRECT_BUDGET, dense O(n^2) beyond).")
         val, row, col = self.gather_values()
         return SparseTensor(val, row, col, self.shape).slogdet()
 
@@ -682,19 +688,25 @@ def dist_solve(plan, state, A, b, x0, cfg):
     if method not in ("cg", "bicgstab", "pipelined_cg"):
         raise ValueError(f"unknown distributed method {method!r}")
 
-    n_in = 4 + (1 if have_x0 else 0) + len(state)
+    # state leaves may be stacked-and-sharded (P, ·) or replicated (the
+    # two-level Schwarz coarse factor) — the preconditioner plan says which
+    sharded = pplan.state_sharded()
+    in_specs = (spec,) * (4 + (1 if have_x0 else 0)) + \
+        tuple(spec if sh else P() for sh in sharded)
 
-    @partial(shard_map, mesh=plan.mesh, in_specs=(spec,) * n_in,
+    @partial(shard_map, mesh=plan.mesh, in_specs=in_specs,
              out_specs=(spec, P()), check_rep=False)
     def run(lval, lrow, lcol, bq, *rest):
         x0q = rest[0][0] if have_x0 else None
-        sleaves = tuple(s[0] for s in (rest[1:] if have_x0 else rest))
+        raw = rest[1:] if have_x0 else rest
+        sleaves = tuple(s[0] if sh else s for s, sh in zip(raw, sharded))
         lv, lr, lc = lval[0], lrow[0], lcol[0]
         mv = lambda xv: _local_matvec(prog, meta.n_loc, lv, lr, lc, xv)
         pdot = lambda u, v: lax.psum(jnp.sum(u * v), meta.axis)
         M = pplan.local_closure(sleaves,
                                 lambda r: _halo_run(prog, r),
-                                lambda z: _halo_run_t(prog, z))
+                                lambda z: _halo_run_t(prog, z),
+                                matvec=mv)
         if method == "pipelined_cg":
             if x0q is None:
                 x, info = pipelined_cg(mv, bq[0], M=M, tol=cfg.tol,

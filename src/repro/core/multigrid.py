@@ -1,32 +1,81 @@
-"""Geometric multigrid V-cycle preconditioner for structured-grid operators.
+"""Multigrid preconditioners — one level-hierarchy abstraction, two builders.
 
 The paper's stated limitation (§5): the pytorch-native backend supports only
 Jacobi preconditioning, "insufficient at large DOF — hence the 1e-2
 residuals in our multi-GPU runs"; AMG (AmgX/hypre) is named as future work.
-This module closes that gap for the paper's own benchmark family
-(variable-coefficient 2D Poisson): a matrix-free geometric V-cycle —
-weighted-Jacobi smoothing, full-weighting restriction of both residual and
-coefficient field, bilinear prolongation, dense coarse solve — usable as the
-``M`` of any Krylov solver in this library (and TPU-friendly: shifts,
-pooling and small matmuls only; no triangular solves).
+This module closes that gap twice over:
 
-It is also a first-class ``precond="mg"`` option of the solver-plan factory
-(:mod:`repro.core.precond`): the hierarchy *structure* (level sizes) is
-static per grid shape, while the per-level operators are rebuilt traced-safe
-from the current stencil values by :meth:`MultigridPreconditioner.from_planes`
-inside the plan's ``setup(values)`` stage.
+* **Geometric** (``precond="mg"``, stencil operators): matrix-free V-cycle —
+  weighted-Jacobi smoothing, full-weighting restriction of both residual and
+  coefficient field, bilinear prolongation, dense coarse solve.  TPU-friendly:
+  shifts, pooling and small matmuls only.
+
+* **Algebraic** (``precond="amg"``, any COO pattern): smoothed-aggregation
+  AMG as a first-class citizen of the plan engine.  The *analyze* half
+  (:func:`amg_symbolic` — eager, numpy, values-free, cached on the
+  ``SolverPlan``) runs greedy aggregation over the sparsity pattern
+  (:func:`repro.core.sparse.aggregate_pattern`), freezes the smoothed-
+  prolongator fill pattern, and packs the Galerkin triple product R·A·P into
+  static gather/segment-sum index programs
+  (:func:`repro.core.sparse.spgemm_program` — the same discipline as
+  ``core/direct.py``'s step programs); the coarsest level gets a cached
+  LDLᵀ/LU program from :func:`repro.core.direct.symbolic_factor`.  The
+  *setup* half (:func:`amg_numeric` — traced-safe) evaluates filtered-matrix
+  weights, prolongator smoothing and the triple product through those
+  programs, so it jits/vmaps and is memoized per values array by the plan's
+  setup stage (``PLAN_STATS["coarsen"]``/``["galerkin"]`` count the two
+  halves).
+
+Both builders produce a tuple of :class:`Level` closures consumed by the
+shared :func:`v_cycle` driver, so the solve stage is one code path.
 """
 from __future__ import annotations
 
 import functools
-from typing import List, Optional, Tuple
+from typing import Callable, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..data.poisson import vc_coefficients
 from ..kernels.ref import stencil5_ref
+from .sparse import aggregate_pattern, coo_matvec, spgemm_program
 
+
+# ---------------------------------------------------------------------------
+# the shared hierarchy abstraction: Level closures + one V-cycle driver
+# ---------------------------------------------------------------------------
+
+class Level(NamedTuple):
+    """One level of a multigrid hierarchy, as closures over the (possibly
+    traced) numeric state.  The coarsest level only needs ``coarse_solve``;
+    every other level supplies the smoother/transfer quadruple.
+    ``post_smooth`` defaults to ``smooth`` when None."""
+    matvec: Callable            # x -> A_l @ x
+    smooth: Callable            # (x, b) -> relaxed x (pre-smoother)
+    restrict: Optional[Callable] = None    # r_l -> r_{l+1}
+    prolong: Optional[Callable] = None     # e_{l+1} -> e_l
+    coarse_solve: Optional[Callable] = None  # b -> A_l^{-1} b (last level)
+    post_smooth: Optional[Callable] = None
+
+
+def v_cycle(levels: Tuple[Level, ...], b, level: int = 0):
+    """One V(pre, post)-cycle over ``levels`` — the recursion is Python
+    (static level count), every op inside is traced-safe."""
+    lv = levels[level]
+    if lv.coarse_solve is not None:
+        return lv.coarse_solve(b)
+    x = lv.smooth(jnp.zeros_like(b), b)
+    r = b - lv.matvec(x)
+    ec = v_cycle(levels, lv.restrict(r), level + 1)
+    x = x + lv.prolong(ec)
+    return (lv.post_smooth or lv.smooth)(x, b)
+
+
+# ---------------------------------------------------------------------------
+# geometric builder (structured 5-point stencil planes)
+# ---------------------------------------------------------------------------
 
 def _smooth(v5, x, b, omega: float = 0.8, iters: int = 2):
     """Weighted-Jacobi smoothing on the 5-point stencil planes."""
@@ -85,7 +134,8 @@ class MultigridPreconditioner:
 
     Levels are built eagerly by 2×2-averaging κ (rediscretization
     coarsening); the coarsest level solves densely.  All per-level operators
-    are the same signed (5, n, n) planes the stencil kernel consumes.
+    are the same signed (5, n, n) planes the stencil kernel consumes; the
+    cycle itself runs through the shared :func:`v_cycle` driver.
     """
 
     def __init__(self, kappa: Optional[jax.Array] = None, *,
@@ -107,6 +157,7 @@ class MultigridPreconditioner:
         # 2×-coarser grid — the restricted residual needs a 4× factor to
         # keep the two-grid correction consistent (h² scaling of the stencil)
         self.scale = 4.0
+        self._hier = self._build_hierarchy()
 
     @classmethod
     def from_planes(cls, v5: jax.Array, *, coarsest: int = 16,
@@ -124,25 +175,250 @@ class MultigridPreconditioner:
         levels, sizes = _build_levels(kappa_proxy, coarsest, fine_planes=v5)
         return cls(_levels=levels, _sizes=sizes, **kw)
 
-    def _vcycle(self, level: int, b):
-        v5 = self.levels[level]
-        x = _smooth(v5, jnp.zeros_like(b), b, self.omega, self.pre)
-        if level == len(self.levels) - 1:
-            nc = b.size
-            return jnp.linalg.solve(self.A_coarse, b.reshape(nc)).reshape(b.shape)
-        r = b - stencil5_ref(v5, x)
-        rc = _restrict(r) * self.scale
-        ec = self._vcycle(level + 1, rc)
-        x = x + _prolong(ec)
-        x = _smooth(v5, x, b, self.omega, self.post)
-        return x
+    def _build_hierarchy(self) -> Tuple[Level, ...]:
+        out = []
+        last = len(self.levels) - 1
+        for l, v5 in enumerate(self.levels):
+            if l == last:
+                ng = self.sizes[l]
+                nc = ng * ng
+                out.append(Level(
+                    matvec=functools.partial(stencil5_ref, v5),
+                    smooth=lambda x, b: x,
+                    coarse_solve=lambda b, A=self.A_coarse, ng=ng, nc=nc:
+                        jnp.linalg.solve(A, b.reshape(nc)).reshape(b.shape)))
+            else:
+                out.append(Level(
+                    matvec=functools.partial(stencil5_ref, v5),
+                    smooth=lambda x, b, v5=v5, it=self.pre:
+                        _smooth(v5, x, b, self.omega, it),
+                    restrict=lambda r: _restrict(r) * self.scale,
+                    prolong=_prolong,
+                    post_smooth=lambda x, b, v5=v5, it=self.post:
+                        _smooth(v5, x, b, self.omega, it)))
+        return tuple(out)
 
     def __call__(self, r: jax.Array) -> jax.Array:
         ng = self.sizes[0]
-        return self._vcycle(0, r.reshape(ng, ng)).reshape(-1)
+        return v_cycle(self._hier, r.reshape(ng, ng)).reshape(-1)
 
 
 def make_mg_preconditioner(kappa: jax.Array, **kw):
     """Factory matching the core.precond interface."""
     mg = MultigridPreconditioner(kappa, **kw)
     return lambda r: mg(r)
+
+
+# ---------------------------------------------------------------------------
+# algebraic builder — smoothed-aggregation AMG in the plan engine
+# ---------------------------------------------------------------------------
+
+class AMGLevelSymbolic(NamedTuple):
+    """Pattern-only artifacts of one AMG level (products of ``analyze``).
+
+    ``a2p`` scatters every A entry into its smoothed-prolongator slot
+    (entry (i,j) → P slot (i, agg[j]), always structurally present); the
+    ``g1_*``/``g2_*`` arrays are the two :func:`spgemm_program` halves of the
+    Galerkin triple product Pᵀ·(A·P), so the numeric setup is two gathers +
+    two segment-sums per level — no dynamic sparse-sparse matmul ever runs.
+    """
+    n: int                       # fine size of this level
+    n_c: int                     # coarse size (number of aggregates)
+    arow: jax.Array              # this level's pattern (level 0 = input A)
+    acol: jax.Array
+    diag_mask: jax.Array         # (nnz,) bool — diagonal entries of A_l
+    agg: jax.Array               # (n,) aggregate id per fine node
+    p_row: jax.Array             # smoothed-prolongator pattern
+    p_col: jax.Array
+    a2p: jax.Array               # (nnz,) A entry → P slot
+    tent: jax.Array              # (nnzP,) 1.0 on tentative slots (i, agg[i])
+    g1_a: jax.Array              # A·P product program
+    g1_p: jax.Array
+    g1_dst: jax.Array
+    nnz_ap: int
+    g2_p: jax.Array              # Pᵀ·(A·P) product program
+    g2_ap: jax.Array
+    g2_dst: jax.Array
+    nnz_c: int
+
+
+class AMGArtifacts(NamedTuple):
+    """Product of :func:`amg_symbolic` — the pattern-time half of the AMG
+    plan, shared by every ``with_values`` refresh and the adjoint."""
+    levels: Tuple[AMGLevelSymbolic, ...]
+    coarse: "object"             # DirectArtifacts of the coarsest level
+    n_coarse: int
+    theta: float
+    omega: float
+    smooth_omega: float
+    pre: int
+    post: int
+    stats: dict
+
+
+def amg_symbolic(row, col, n: int, *, theta: float = 0.08,
+                 omega: float = 2.0 / 3.0, smooth_omega: float = 2.0 / 3.0,
+                 coarsest: int = 64, max_levels: int = 12,
+                 pre_smooth: int = 1, post_smooth: int = 1) -> AMGArtifacts:
+    """Analyze one sparsity pattern for smoothed-aggregation AMG (eager).
+
+    Values-free by contract (plans outlive any single trace): aggregation,
+    the smoothed-prolongator fill pattern and both Galerkin product programs
+    depend only on the graph.  ``theta`` (strength threshold) and ``omega``
+    (prolongator-smoothing damping) are *numeric* knobs consumed later by
+    :func:`amg_numeric`.  The coarsest level's pattern goes through
+    :func:`repro.core.direct.symbolic_factor`, so the V-cycle bottoms out in
+    the cached-LDLᵀ machinery instead of a dense solve.
+    """
+    from . import direct as _direct
+    from .dispatch import PLAN_STATS
+    with jax.ensure_compile_time_eval():
+        r = np.asarray(row, np.int64)
+        c = np.asarray(col, np.int64)
+        levels: List[AMGLevelSymbolic] = []
+        n_l = n
+        for _ in range(max_levels):
+            if n_l <= coarsest:
+                break
+            agg, n_c = aggregate_pattern(r, c, n_l)
+            if n_c >= n_l:                   # aggregation stalled — stop
+                break
+            # smoothed-prolongator pattern: P = (I − ω D⁻¹ Ā) T has slots
+            # {(i, agg[j]) : (i,j) ∈ A} ∪ {(i, agg[i])}
+            pkeys = np.unique(np.concatenate(
+                [r * np.int64(n_c) + agg[c],
+                 np.arange(n_l, dtype=np.int64) * np.int64(n_c) + agg]))
+            p_row = (pkeys // n_c).astype(np.int64)
+            p_col = (pkeys % n_c).astype(np.int64)
+            a2p = np.searchsorted(pkeys, r * np.int64(n_c) + agg[c])
+            tent = (p_col == agg[p_row]).astype(np.float64)
+            # Galerkin R·A·P as two static spgemm programs: AP = A·P, then
+            # A_c = Pᵀ·AP (R = Pᵀ — symmetric-pattern Galerkin)
+            g1_a, g1_p, g1_dst, ap_row, ap_col = spgemm_program(
+                r, c, p_row, p_col, (n_l, n_c))
+            g2_p, g2_ap, g2_dst, c_row, c_col = spgemm_program(
+                p_col, p_row, ap_row, ap_col, (n_c, n_c))
+            levels.append(AMGLevelSymbolic(
+                n=n_l, n_c=n_c,
+                arow=jnp.asarray(r, jnp.int32), acol=jnp.asarray(c, jnp.int32),
+                diag_mask=jnp.asarray(r == c),
+                agg=jnp.asarray(agg, jnp.int32),
+                p_row=jnp.asarray(p_row, jnp.int32),
+                p_col=jnp.asarray(p_col, jnp.int32),
+                a2p=jnp.asarray(a2p, jnp.int32),
+                tent=jnp.asarray(tent),
+                g1_a=jnp.asarray(g1_a, jnp.int32),
+                g1_p=jnp.asarray(g1_p, jnp.int32),
+                g1_dst=jnp.asarray(g1_dst, jnp.int32), nnz_ap=len(ap_row),
+                g2_p=jnp.asarray(g2_p, jnp.int32),
+                g2_ap=jnp.asarray(g2_ap, jnp.int32),
+                g2_dst=jnp.asarray(g2_dst, jnp.int32), nnz_c=len(c_row)))
+            r, c, n_l = c_row, c_col, n_c
+        coarse = _direct.symbolic_factor(r, c, n_l)
+        PLAN_STATS["coarsen"] += 1
+        stats = {"n_levels": len(levels) + 1, "n_coarse": n_l,
+                 "sizes": [lv.n for lv in levels] + [n_l]}
+        return AMGArtifacts(levels=tuple(levels), coarse=coarse, n_coarse=n_l,
+                            theta=theta, omega=omega,
+                            smooth_omega=smooth_omega,
+                            pre=pre_smooth, post=post_smooth, stats=stats)
+
+
+def _amg_level_numeric(lev: AMGLevelSymbolic, aval, theta: float,
+                       omega: float):
+    """One level of the numeric setup (traced-safe): filtered-matrix weights,
+    prolongator smoothing, Galerkin triple product through the index
+    programs.  Returns ``(dinv, p_val, c_val)``."""
+    d = jax.ops.segment_sum(jnp.where(lev.diag_mask, aval, 0.0),
+                            lev.arow, num_segments=lev.n)
+    # strength filtering: keep |a_ij| ≥ θ √|a_ii a_jj|, lump dropped mass
+    # into the diagonal (Vaněk's filtered matrix Ā) — numeric, not symbolic,
+    # so the SAME pattern program serves every values refresh
+    offd = lev.arow != lev.acol
+    strong = jnp.abs(aval) >= theta * jnp.sqrt(
+        jnp.abs(d[lev.arow] * d[lev.acol]) + 1e-300)
+    keep = (~offd) | strong
+    a_f = jnp.where(keep, aval, 0.0)
+    lump = jax.ops.segment_sum(jnp.where(keep, 0.0, aval), lev.arow,
+                               num_segments=lev.n)
+    d_f = d - lump
+    dinv_f = jnp.where(jnp.abs(d_f) > 1e-30, 1.0 / d_f, 0.0)
+    # P = (I − ω D̄⁻¹ Ā) T: scatter Ā through a2p, subtract the lumped mass
+    # at the tentative slot (it is Ā's diagonal adjustment), add T
+    p_sum = jax.ops.segment_sum(a_f, lev.a2p, num_segments=len(lev.p_row))
+    p_sum = p_sum - lev.tent * lump[lev.p_row]
+    p_val = lev.tent.astype(aval.dtype) - omega * dinv_f[lev.p_row] * p_sum
+    # Galerkin A_c = Pᵀ (A P) — two gathers + two segment-sums, UNfiltered A
+    ap = jax.ops.segment_sum(aval[lev.g1_a] * p_val[lev.g1_p], lev.g1_dst,
+                             num_segments=lev.nnz_ap)
+    c_val = jax.ops.segment_sum(p_val[lev.g2_p] * ap[lev.g2_ap], lev.g2_dst,
+                                num_segments=lev.nnz_c)
+    dinv = jnp.where(jnp.abs(d) > 1e-30, 1.0 / d, 0.0)
+    return dinv, p_val, c_val
+
+
+def amg_numeric(art: AMGArtifacts, val: jax.Array):
+    """The jit/vmap-safe numeric half of the AMG plan (the ``setup`` stage):
+    per-level smoothing weights + prolongator values + Galerkin coarse
+    values, and the coarsest level's numeric LDLᵀ/LU refactorization.
+    Memoized per values array by ``SolverPlan.setup``."""
+    from . import direct as _direct
+    from .dispatch import PLAN_STATS
+    PLAN_STATS["galerkin"] += 1
+    state = []
+    aval = val
+    for lev in art.levels:
+        dinv, p_val, c_val = _amg_level_numeric(lev, aval, art.theta,
+                                                art.omega)
+        state.append((aval, dinv, p_val))
+        aval = c_val
+    C = _direct.numeric_factor(art.coarse, aval)
+    return tuple(state), C
+
+
+def amg_hierarchy(art: AMGArtifacts, state) -> Tuple[Level, ...]:
+    """Assemble the shared-driver :class:`Level` tuple from symbolic
+    artifacts + numeric state — flat-vector transfers via the prolongator
+    COO pattern (restrict = Pᵀ r, prolong = P e)."""
+    from . import direct as _direct
+    per_level, C = state
+    levels = []
+    for lev, (aval, dinv, p_val) in zip(art.levels, per_level):
+        mv = functools.partial(coo_matvec, aval, lev.arow, lev.acol,
+                               n_rows=lev.n)
+
+        def make_smooth(mv, dinv, it, om=art.smooth_omega):
+            def smooth(x, b):
+                for _ in range(it):
+                    x = x + om * dinv * (b - mv(x))
+                return x
+            return smooth
+
+        levels.append(Level(
+            matvec=mv,
+            smooth=make_smooth(mv, dinv, art.pre),
+            restrict=lambda r, lev=lev, p_val=p_val:
+                jax.ops.segment_sum(p_val * r[lev.p_row], lev.p_col,
+                                    num_segments=lev.n_c),
+            prolong=lambda e, lev=lev, p_val=p_val:
+                jax.ops.segment_sum(p_val * e[lev.p_col], lev.p_row,
+                                    num_segments=lev.n),
+            post_smooth=make_smooth(mv, dinv, art.post)))
+    levels.append(Level(
+        matvec=lambda x: x,
+        smooth=lambda x, b: x,
+        coarse_solve=lambda b: _direct.factored_solve(art.coarse, C, b)))
+    return tuple(levels)
+
+
+class AMGPreconditioner:
+    """Apply closure for ``precond="amg"``: one V-cycle per application over
+    the plan's frozen hierarchy.  Built by ``PreconditionerPlan.refresh``
+    from (symbolic artifacts, numeric state)."""
+
+    def __init__(self, art: AMGArtifacts, state):
+        self.art = art
+        self.levels = amg_hierarchy(art, state)
+
+    def __call__(self, r: jax.Array) -> jax.Array:
+        return v_cycle(self.levels, r)

@@ -4,11 +4,14 @@ The paper's pytorch-native backend supports only Jacobi (its stated
 limitation, §5).  We reproduce Jacobi faithfully and add *beyond-paper*
 preconditioners: block-Jacobi (dense MXU-sized diagonal blocks), Chebyshev
 polynomial, a geometric multigrid V-cycle (``precond="mg"``, stencil
-operators only), and an incomplete factorization (``precond="ilu"``,
-ILU(0)/IC(0)) that shares the direct backend's symbolic machinery
-(:mod:`repro.core.direct`): the zero-fill elimination structures and the
-packed level schedule are computed once per pattern in ``build``, and the
-numeric refactorization + two level-scheduled triangular sweeps are
+operators only), smoothed-aggregation algebraic multigrid
+(``precond="amg"``, any COO pattern — coarsening and the Galerkin triple
+product live as static index programs on the plan, see
+:mod:`repro.core.multigrid`), and an incomplete factorization
+(``precond="ilu"``, ILU(0)/IC(0)) that shares the direct backend's symbolic
+machinery (:mod:`repro.core.direct`): the zero-fill elimination structures
+and the packed level schedule are computed once per pattern in ``build``,
+and the numeric refactorization + two level-scheduled triangular sweeps are
 traced-safe ``lax.scan`` kernels.
 
 Plan protocol (used by :class:`repro.core.dispatch.SolverPlan`):
@@ -40,8 +43,8 @@ __all__ = [
 ]
 
 PRECONDITIONERS = ("none", "identity", "jacobi", "block_jacobi", "chebyshev",
-                   "mg", "ilu")
-DIST_PRECONDITIONERS = ("none", "identity", "jacobi", "schwarz")
+                   "mg", "amg", "ilu")
+DIST_PRECONDITIONERS = ("none", "identity", "jacobi", "schwarz", "schwarz2")
 
 
 def identity():
@@ -187,6 +190,19 @@ class PreconditionerPlan:
                     "(symbolic analysis is eager)")
             self._ilu = _direct.symbolic_factor(r, c, self.shape[0],
                                                 incomplete=True)
+        if self.name == "amg":
+            # eager pattern part: smoothed-aggregation coarsening + the
+            # Galerkin index programs + the coarsest level's LDLᵀ/LU program
+            # (core/multigrid.amg_symbolic) — once per pattern, cached here
+            from . import multigrid as _mg
+            try:
+                r = np.asarray(row).astype(np.int64)
+                c = np.asarray(col).astype(np.int64)
+            except Exception:
+                raise ValueError(
+                    "precond='amg' needs a concrete sparsity pattern "
+                    "(aggregation and the Galerkin programs are eager)")
+            self._amg = _mg.amg_symbolic(r, c, self.shape[0])
 
     def refresh(self, A, matvec: Callable) -> Callable:
         """values-dependent stage — traced-safe; one call per solver setup."""
@@ -215,6 +231,10 @@ class PreconditionerPlan:
             art = self._ilu
             C = _direct.numeric_factor(art, A.val)   # traced-safe refactorize
             return lambda r: _direct.factored_solve(art, C, r)
+        if self.name == "amg":
+            from . import multigrid as _mg
+            state = _mg.amg_numeric(self._amg, A.val)  # traced-safe Galerkin
+            return _mg.AMGPreconditioner(self._amg, state)
         raise ValueError(f"unknown preconditioner {self.name!r}")
 
 
@@ -236,16 +256,28 @@ class DistPreconditionerPlan:
       schwarz_symbolic`); ``refresh`` is a vmapped numeric refactorization,
       and the per-iteration apply is gather-halos → local triangular sweeps →
       transposed-halo combine (Σ Rᵀ A_ext⁻¹ R — the additive-Schwarz sum).
+    * ``schwarz2`` — the two-level variant: the one-level sum above PLUS an
+      additive coarse correction ``T A_c⁻¹ Tᵀ r``.  The coarse level is the
+      AMG machinery's tentative (piecewise-constant) aggregation of the
+      GLOBAL pattern (:func:`repro.core.sparse.tentative_coarse_pattern`),
+      its Galerkin matrix assembled by ONE segment-sum from the stacked
+      values and factored through :func:`repro.core.direct.symbolic_factor`
+      — a distributed direct coarse solve on cached factors.  The
+      per-iteration apply is all_gather residual → aggregate → coarse
+      triangular sweeps → scatter correction, all through frozen index maps
+      (nothing queries the axis environment at trace time).
 
-    ``refresh(lval)`` returns a tuple of stacked state arrays (leading dim
-    P) that the solve stage ships through ``shard_map``; ``local_closure``
-    turns the per-shard slice of that state into the apply closure used
-    inside the Krylov loop.  Halo application is injected by the caller
-    (``halo_fwd``/``halo_bwd``) so this module stays mesh-agnostic.
+    ``refresh(lval)`` returns a tuple of state arrays — stacked ``(P, ·)``
+    leaves sharded over the mesh axis, plus replicated leaves (the coarse
+    factor) flagged by :meth:`state_sharded` — that the solve stage ships
+    through ``shard_map``; ``local_closure`` turns the per-shard slice of
+    that state into the apply closure used inside the Krylov loop.  Halo
+    application is injected by the caller (``halo_fwd``/``halo_bwd``) so
+    this module stays mesh-agnostic.
     """
 
     def __init__(self, name: Optional[str], lrow, lcol, meta, *,
-                 bounds=None):
+                 bounds=None, coarsest: int = 160):
         self.name = "none" if name in (None, "none", "identity") else name
         if self.name not in DIST_PRECONDITIONERS:
             raise ValueError(
@@ -263,7 +295,7 @@ class DistPreconditionerPlan:
             self._diag_mask = jnp.asarray(
                 (lr + meta.h_lo == lc) & valid)
             self._lrow = jnp.asarray(lr, jnp.int32)
-        if self.name == "schwarz":
+        if self.name in ("schwarz", "schwarz2"):
             from . import direct as _direct
             from .distributed import global_entries
             if bounds is None:
@@ -284,6 +316,33 @@ class DistPreconditionerPlan:
                 entries.append((row_g[m] - lo, col_g[m] - lo, fa[m]))
             self._schwarz = _direct.schwarz_symbolic(
                 entries, n_ext, n_src=p * nnz_loc)
+        if self.name == "schwarz2":
+            from . import direct as _direct
+            from .sparse import tentative_coarse_pattern
+            agg, n_c, e2c, crow, ccol = tentative_coarse_pattern(
+                row_g, col_g, meta.n, coarsest=coarsest)
+            self._coarse_art = _direct.symbolic_factor(crow, ccol, n_c)
+            self._n_c = n_c
+            self._c_nnz = len(crow)
+            # value-assembly program: c_val = Σ flat[fa] into coarse slots
+            self._c_fa = jnp.asarray(fa, jnp.int32)
+            self._c_e2c = jnp.asarray(e2c, jnp.int32)
+            # owned-row → coarse-node map, padded tail rows → dump slot n_c
+            own = np.full((p, n_loc), n_c, np.int64)
+            for q in range(p):
+                cnt = int(bounds[q + 1] - bounds[q])
+                own[q, :cnt] = agg[bounds[q]:bounds[q + 1]]
+            self._own2coarse = jnp.asarray(own, jnp.int32)
+
+    def state_sharded(self) -> tuple:
+        """Per-leaf sharding of :meth:`refresh`'s output: True → stacked
+        ``(P, ·)`` sharded over the mesh axis, False → replicated (the
+        two-level coarse factor, identical on every shard)."""
+        if self.name == "none":
+            return ()
+        if self.name == "schwarz2":
+            return (True, False)
+        return (True,)
 
     def refresh(self, lval) -> tuple:
         """values-dependent stage — traced-safe; returns stacked state."""
@@ -298,23 +357,36 @@ class DistPreconditionerPlan:
                 return jnp.where(jnp.abs(d) > 1e-30, 1.0 / d, 1.0)
 
             return (jax.vmap(one)(lval, self._diag_mask, self._lrow),)
-        if self.name == "schwarz":
+        if self.name in ("schwarz", "schwarz2"):
             from . import direct as _direct
-            return (_direct.schwarz_numeric(self._schwarz,
-                                            lval.reshape(-1)),)
+            C = _direct.schwarz_numeric(self._schwarz, lval.reshape(-1))
+            if self.name == "schwarz":
+                return (C,)
+            # coarse Galerkin values Tᵀ A T: every tentative-prolongator
+            # entry is 1, so the triple product is ONE segment-sum of the
+            # flat values through the frozen entry→coarse-slot map
+            c_val = jax.ops.segment_sum(lval.reshape(-1)[self._c_fa],
+                                        self._c_e2c,
+                                        num_segments=self._c_nnz)
+            Cc = _direct.numeric_factor(self._coarse_art, c_val)
+            return (C, Cc)
         raise ValueError(f"unknown distributed preconditioner {self.name!r}")
 
     def local_closure(self, state_q, halo_fwd: Callable,
-                      halo_bwd: Callable) -> Callable:
-        """Per-shard apply closure (inside ``shard_map``; state pre-sliced)."""
+                      halo_bwd: Callable,
+                      matvec: Optional[Callable] = None) -> Callable:
+        """Per-shard apply closure (inside ``shard_map``; state pre-sliced).
+        ``matvec`` (the shard-local halo'd SpMV) is only required by the
+        two-level mode's deflation products."""
         if self.name == "none":
             return identity()
         if self.name == "jacobi":
             (inv,) = state_q
             return lambda r: inv * r
-        if self.name == "schwarz":
+        if self.name in ("schwarz", "schwarz2"):
             from . import direct as _direct
-            (C,) = state_q
+            from jax import lax
+            C = state_q[0]
             art = self._schwarz.art
 
             def apply(r):
@@ -322,7 +394,41 @@ class DistPreconditionerPlan:
                 z_ext = _direct.factored_solve(art, C, r_ext)
                 return halo_bwd(z_ext)     # Σ Rᵀ A_ext⁻¹ R: overlap summed
 
-            return apply
+            if self.name == "schwarz":
+                return apply
+
+            if matvec is None:
+                raise ValueError("schwarz2 needs the shard-local matvec")
+            Cc = state_q[1]
+            c_art = self._coarse_art
+            own = self._own2coarse
+            n_c = self._n_c
+            axis = self.meta.axis
+
+            def coarse(r):
+                # Q r = T A_c⁻¹ Tᵀ r: gather the global residual (frozen
+                # axis name; all_gather orders shards by axis index),
+                # aggregate, solve on the cached coarse factors, scatter
+                r_all = lax.all_gather(r, axis)          # (P, n_loc)
+                rc = jax.ops.segment_sum(
+                    r_all.reshape(-1), own.reshape(-1),
+                    num_segments=n_c + 1)[:n_c]
+                zc = _direct.factored_solve(c_art, Cc, rc)
+                zc_pad = jnp.concatenate([zc, jnp.zeros((1,), zc.dtype)])
+                return zc_pad[own[lax.axis_index(axis)]]
+
+            def apply2(r):
+                # symmetric deflated two-level (BNN/ADEF-2 form):
+                #   M = Q + (I − Q A) M_AS (I − A Q)
+                # — the coarse space is solved exactly and REMOVED from the
+                # Schwarz sweep's workload instead of added on top (a purely
+                # additive T A_c⁻¹ Tᵀ term double-counts the low modes the
+                # exact subdomain solves already resolve)
+                zc = coarse(r)
+                w = apply(r - matvec(zc))
+                return zc + w - coarse(matvec(w))
+
+            return apply2
         raise ValueError(f"unknown distributed preconditioner {self.name!r}")
 
 

@@ -30,6 +30,9 @@ __all__ = [
     "detect_properties",
     "has_full_diagonal",
     "build_bell",
+    "aggregate_pattern",
+    "spgemm_program",
+    "tentative_coarse_pattern",
 ]
 
 
@@ -81,6 +84,122 @@ def coo_to_dense(val, row, col, shape):
 def coo_diagonal(val, row, col, n):
     mask = (row == col)
     return jax.ops.segment_sum(jnp.where(mask, val, 0.0), row, num_segments=n)
+
+
+# ---------------------------------------------------------------------------
+# pattern-level coarsening / product helpers (eager / numpy — the symbolic
+# half of the algebraic-multigrid plan, see core/multigrid.py)
+# ---------------------------------------------------------------------------
+
+def aggregate_pattern(row, col, n: int):
+    """Greedy aggregation of the (symmetrized) pattern graph.
+
+    The values-free half of smoothed-aggregation coarsening: pass 1 seeds an
+    aggregate at every node whose whole neighbourhood is still free (node ∪
+    neighbours become one aggregate — the standard Vaněk sweep); pass 2
+    attaches leftover nodes to the neighbouring aggregate they touch most;
+    pass 3 turns isolated stragglers into singletons.  Returns ``(agg, n_agg)``
+    with ``agg[i]`` the aggregate id of fine node ``i``.
+    """
+    r = np.asarray(row, dtype=np.int64)
+    c = np.asarray(col, dtype=np.int64)
+    mask = r != c
+    rr = np.concatenate([r[mask], c[mask]])
+    cc = np.concatenate([c[mask], r[mask]])
+    order = np.lexsort((cc, rr))
+    rr, cc = rr[order], cc[order]
+    keep = np.ones(len(rr), bool)
+    keep[1:] = (rr[1:] != rr[:-1]) | (cc[1:] != cc[:-1])
+    rr, cc = rr[keep], cc[keep]
+    ptr = np.searchsorted(rr, np.arange(n + 1))
+
+    agg = np.full(n, -1, dtype=np.int64)
+    n_agg = 0
+    for i in range(n):                     # pass 1: free-neighbourhood seeds
+        if agg[i] >= 0:
+            continue
+        nb = cc[ptr[i]:ptr[i + 1]]
+        if nb.size and (agg[nb] >= 0).any():
+            continue
+        agg[i] = n_agg
+        agg[nb] = n_agg
+        n_agg += 1
+    for i in range(n):                     # pass 2: attach to busiest neighbour
+        if agg[i] >= 0:
+            continue
+        nb_agg = agg[cc[ptr[i]:ptr[i + 1]]]
+        nb_agg = nb_agg[nb_agg >= 0]
+        if nb_agg.size:
+            agg[i] = np.bincount(nb_agg).argmax()
+    for i in range(n):                     # pass 3: isolated singletons
+        if agg[i] < 0:
+            agg[i] = n_agg
+            n_agg += 1
+    return agg, int(n_agg)
+
+
+def spgemm_program(arow, acol, brow, bcol, shape_c):
+    """Static index program for the sparse product C = A·B (pattern-level).
+
+    Enumerates every structurally-nonzero pair (entry ``e`` of A, entry ``f``
+    of B with ``brow[f] == acol[e]``), assigns each its slot in the unique
+    pattern of C, and returns ``(ga, gb, gdst, crow, ccol)``: the numeric
+    product is ONE gather + segment-sum, ``c_val = segment_sum(
+    a_val[ga] * b_val[gb], gdst, num_segments=len(crow))`` — the same
+    static-index discipline as ``core/direct.py``'s step programs, reused by
+    the Galerkin triple product of the AMG plan.
+    """
+    arow = np.asarray(arow, np.int64); acol = np.asarray(acol, np.int64)
+    brow = np.asarray(brow, np.int64); bcol = np.asarray(bcol, np.int64)
+    ob = np.argsort(brow, kind="stable")
+    # CSR-ish grouping of B by row (row range = A's column space)
+    n_mid = int(max(acol.max(initial=-1), brow.max(initial=-1))) + 1
+    bptr = np.searchsorted(brow[ob], np.arange(n_mid + 1))
+    cnt = (bptr[acol + 1] - bptr[acol])            # pairs per A entry
+    total = int(cnt.sum())
+    ga = np.repeat(np.arange(len(arow), dtype=np.int64), cnt)
+    grp = np.repeat(np.cumsum(cnt) - cnt, cnt)
+    loc = np.arange(total, dtype=np.int64) - grp
+    gb = ob[np.repeat(bptr[acol], cnt) + loc]
+    keys = arow[ga] * np.int64(shape_c[1]) + bcol[gb]
+    ukeys, gdst = np.unique(keys, return_inverse=True)
+    crow = (ukeys // shape_c[1]).astype(np.int64)
+    ccol = (ukeys % shape_c[1]).astype(np.int64)
+    return ga, gb, gdst.astype(np.int64), crow, ccol
+
+
+def tentative_coarse_pattern(row, col, n: int, *, coarsest: int = 48,
+                             max_levels: int = 12):
+    """Repeated pattern aggregation down to ``coarsest`` nodes (values-free).
+
+    Composes the per-level aggregate maps into ONE fine→coarse map and the
+    coarse Galerkin pattern Tᵀ·A·T of the *tentative* (piecewise-constant)
+    prolongator: because every T entry is 1, the numeric coarse matrix is a
+    single segment-sum of the fine values through ``e2c``.  Returns
+    ``(agg, n_c, e2c, crow, ccol)``.  This is the coarse level of the
+    two-level Schwarz preconditioner (core/precond.py).
+    """
+    agg = np.arange(n, dtype=np.int64)
+    n_c = n
+    r = np.asarray(row, np.int64)
+    c = np.asarray(col, np.int64)
+    for _ in range(max_levels):
+        if n_c <= coarsest:
+            break
+        a, na = aggregate_pattern(r, c, n_c)
+        if na >= n_c:                       # aggregation stalled
+            break
+        agg = a[agg]
+        keys = np.unique(a[r] * np.int64(na) + a[c])
+        r = (keys // na).astype(np.int64)
+        c = (keys % na).astype(np.int64)
+        n_c = na
+    keys = agg[np.asarray(row, np.int64)] * np.int64(n_c) + \
+        agg[np.asarray(col, np.int64)]
+    ukeys, e2c = np.unique(keys, return_inverse=True)
+    crow = (ukeys // n_c).astype(np.int64)
+    ccol = (ukeys % n_c).astype(np.int64)
+    return agg, int(n_c), e2c.astype(np.int64), crow, ccol
 
 
 # ---------------------------------------------------------------------------
@@ -324,10 +443,13 @@ class SparseTensor:
         is the sparse LDLᵀ/LU path with a cached symbolic factorization
         (methods ``ldlt``/``lu``); auto prefers it for mid-size systems and
         whenever ``props["illcond_hint"]`` is set.  ``precond`` ∈ {none,
-        jacobi, block_jacobi, chebyshev, mg, ilu} applies to the iterative
-        backends; ``ilu`` is ILU(0)/IC(0) built on the same symbolic
-        machinery.  Multiple right-hand sides (leading batch dims on ``b``)
-        share one setup — a single factorization serves the whole batch.
+        jacobi, block_jacobi, chebyshev, mg, amg, ilu} applies to the
+        iterative backends; ``ilu`` is ILU(0)/IC(0) built on the same
+        symbolic machinery, ``mg`` the geometric V-cycle (stencil layouts),
+        ``amg`` smoothed-aggregation algebraic multigrid for any pattern
+        (coarsening and Galerkin programs cached on the plan).  Multiple
+        right-hand sides (leading batch dims on ``b``) share one setup — a
+        single factorization serves the whole batch.
         """
         from . import adjoint, dispatch
         cfg = dispatch.make_config(self, backend=backend, method=method,
@@ -343,7 +465,9 @@ class SparseTensor:
                                     compute_vector_grads=compute_vector_grads)
 
     def slogdet(self):
-        """Dense-only log-determinant (documented as non-scaling, paper §3.3)."""
+        """(sign, log|det|): sparse via the plan engine's cached LDLᵀ/LU
+        factors (Σ log |d_i| with sign tracking) for concrete patterns
+        within ``DIRECT_BUDGET``; dense fallback beyond (paper §3.3)."""
         from . import adjoint
         return adjoint.sparse_slogdet(self)
 

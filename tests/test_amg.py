@@ -1,0 +1,194 @@
+"""Algebraic multigrid in the plan engine (smoothed aggregation).
+
+Covers the PR-4 tentpole: ``precond="amg"`` works on unstructured patterns
+the geometric ``mg`` cannot touch, cuts CG iterations ≥4× vs Jacobi on a
+graph Laplacian, carries exact adjoint gradients through ``sparse_solve``,
+and the analyze/setup split is observable — exactly ONE pattern coarsening
+and ONE numeric Galerkin product across a tolerance sweep + backward
+(``PLAN_STATS["coarsen"]``/``["galerkin"]``).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import PLAN_STATS, SparseTensor, reset_plan_stats
+from repro.core import multigrid as mg
+from repro.core.adjoint import sparse_solve_with_info
+from repro.core.dispatch import make_config
+from repro.data.graphs import graph_laplacian
+from repro.data.poisson import poisson1d, poisson2d
+
+
+def _convection_diffusion(n, c=0.3):
+    A1 = poisson1d(n)
+    val = np.asarray(A1.val).copy()
+    val[np.asarray(A1.col) == np.asarray(A1.row) - 1] = -1.0 - c
+    val[np.asarray(A1.col) == np.asarray(A1.row) + 1] = -1.0 + c
+    return SparseTensor(val, A1.row, A1.col, (n, n))
+
+
+# ---------------------------------------------------------------------------
+# the acceptance criterion: ≥4× fewer CG iterations than Jacobi on an
+# unstructured problem mg cannot handle
+# ---------------------------------------------------------------------------
+
+def test_amg_beats_jacobi_4x_on_unstructured_graph():
+    G = graph_laplacian(3000, seed=0, shift=1e-3)
+    assert G.stencil is None          # no grid structure — mg inapplicable
+    with pytest.raises(ValueError, match="mg"):
+        G.solve(jnp.ones(G.shape[0]), backend="jnp", precond="mg")
+    b = jnp.asarray(np.random.default_rng(0).normal(size=G.shape[0]))
+    cfg_j = make_config(G, backend="jnp", method="cg", tol=1e-8,
+                        maxiter=40000)
+    xj, ij = sparse_solve_with_info(cfg_j, G, b)
+    cfg_a = make_config(G, backend="jnp", method="cg", tol=1e-8,
+                        maxiter=40000, precond="amg")
+    xa, ia = sparse_solve_with_info(cfg_a, G, b)
+    assert bool(ia.converged) and bool(ij.converged)
+    assert float(jnp.linalg.norm(G @ xa - b)) < 1e-6
+    assert int(ia.iters) * 4 <= int(ij.iters), (int(ia.iters), int(ij.iters))
+
+
+def test_amg_on_structured_poisson_too():
+    """amg needs no stencil metadata but still works on grid operators."""
+    A = poisson2d(32)
+    b = jnp.ones(A.shape[0])
+    cfg = make_config(A, backend="jnp", method="cg", tol=1e-10, maxiter=2000,
+                      precond="amg")
+    x, info = sparse_solve_with_info(cfg, A, b)
+    assert bool(info.converged)
+    assert float(jnp.linalg.norm(A @ x - b)) < 1e-7
+
+
+# ---------------------------------------------------------------------------
+# plan-reuse counters: 1 coarsening + 1 Galerkin across sweep + backward
+# ---------------------------------------------------------------------------
+
+def test_amg_one_coarsen_one_galerkin_across_sweep_and_backward():
+    A = poisson2d(12)
+    b = jnp.ones(A.shape[0])
+    reset_plan_stats()
+    for tol in (1e-4, 1e-8, 1e-12):
+        A.solve(b, backend="jnp", method="cg", tol=tol, precond="amg")
+
+    def loss(val):
+        x = A.with_values(val).solve(b, backend="jnp", method="cg",
+                                     tol=1e-12, precond="amg")
+        return jnp.sum(x ** 2)
+
+    jax.grad(loss)(A.val)
+    assert PLAN_STATS["coarsen"] == 1, PLAN_STATS   # symbolic: once/pattern
+    assert PLAN_STATS["galerkin"] == 1, PLAN_STATS  # numeric: once/values
+    assert PLAN_STATS["analyze"] == 1, PLAN_STATS
+    assert PLAN_STATS["transpose_shared"] == 1, PLAN_STATS
+    # new values DO refresh the numeric half — but never re-coarsen
+    A.with_values(A.val * 2.0).solve(b, backend="jnp", method="cg",
+                                     tol=1e-8, precond="amg")
+    assert PLAN_STATS["coarsen"] == 1, PLAN_STATS
+    assert PLAN_STATS["galerkin"] == 2, PLAN_STATS
+
+
+# ---------------------------------------------------------------------------
+# gradients through the AMG-preconditioned solve (sym + non-sym)
+# ---------------------------------------------------------------------------
+
+def test_amg_gradcheck_symmetric_matches_dense_autodiff():
+    A = poisson2d(12)
+    b = jnp.asarray(np.random.default_rng(0).normal(size=A.shape[0]))
+
+    def loss(val, rhs):
+        x = A.with_values(val).solve(rhs, backend="jnp", method="cg",
+                                     tol=1e-13, precond="amg")
+        return jnp.sum(x ** 2)
+
+    def loss_dense(val, rhs):
+        return jnp.sum(jnp.linalg.solve(A.with_values(val).todense(),
+                                        rhs) ** 2)
+
+    g = jax.grad(loss, (0, 1))(A.val, b)
+    gd = jax.grad(loss_dense, (0, 1))(A.val, b)
+    np.testing.assert_allclose(np.asarray(g[0]), np.asarray(gd[0]),
+                               rtol=1e-6, atol=1e-8)
+    np.testing.assert_allclose(np.asarray(g[1]), np.asarray(gd[1]),
+                               rtol=1e-6, atol=1e-8)
+
+
+def test_amg_gradcheck_nonsymmetric_matches_dense_autodiff():
+    B = _convection_diffusion(48, c=0.4)
+    assert not B.props["symmetric"]
+    b = jnp.asarray(np.random.default_rng(1).normal(size=48))
+
+    def loss(val, rhs):
+        x = B.with_values(val).solve(rhs, backend="jnp", method="bicgstab",
+                                     tol=1e-13, maxiter=8000, precond="amg")
+        return jnp.sum(x ** 3)
+
+    def loss_dense(val, rhs):
+        return jnp.sum(jnp.linalg.solve(B.with_values(val).todense(),
+                                        rhs) ** 3)
+
+    g = jax.grad(loss, (0, 1))(B.val, b)
+    gd = jax.grad(loss_dense, (0, 1))(B.val, b)
+    np.testing.assert_allclose(np.asarray(g[0]), np.asarray(gd[0]),
+                               rtol=1e-6, atol=1e-8)
+    np.testing.assert_allclose(np.asarray(g[1]), np.asarray(gd[1]),
+                               rtol=1e-6, atol=1e-8)
+
+
+def test_amg_jit_safe():
+    """The numeric half (filtered weights, smoothing, Galerkin, coarse
+    refactorization) runs under jit — the symbolic half stays eager."""
+    A = poisson2d(10)
+    b = jnp.ones(A.shape[0])
+    f = jax.jit(lambda val, rhs: A.with_values(val).solve(
+        rhs, backend="jnp", method="cg", tol=1e-11, precond="amg"))
+    x = f(A.val, b)
+    assert float(jnp.linalg.norm(A @ x - b)) < 1e-7
+
+
+# ---------------------------------------------------------------------------
+# the symbolic/numeric split itself (unit level)
+# ---------------------------------------------------------------------------
+
+def test_galerkin_program_matches_dense_triple_product():
+    G = graph_laplacian(300, seed=2, shift=1e-2)
+    r, c, n = np.asarray(G.row), np.asarray(G.col), G.shape[0]
+    art = mg.amg_symbolic(r, c, n)
+    state, C = mg.amg_numeric(art, G.val)
+    lev = art.levels[0]
+    aval, dinv, p_val = state[0]
+    P = np.zeros((n, lev.n_c))
+    P[np.asarray(lev.p_row), np.asarray(lev.p_col)] += np.asarray(p_val)
+    Ad = np.asarray(G.todense())
+    Ac_ref = P.T @ Ad @ P
+    nxt = art.levels[1] if len(art.levels) > 1 else None
+    if nxt is not None:
+        Ac = np.zeros((lev.n_c, lev.n_c))
+        np.add.at(Ac, (np.asarray(nxt.arow), np.asarray(nxt.acol)),
+                  np.asarray(state[1][0]))
+        np.testing.assert_allclose(Ac, Ac_ref, rtol=1e-10, atol=1e-12)
+
+
+def test_amg_hierarchy_coarsens_geometrically():
+    G = graph_laplacian(2000, seed=1)
+    art = mg.amg_symbolic(np.asarray(G.row), np.asarray(G.col), G.shape[0])
+    sizes = art.stats["sizes"]
+    assert sizes[0] == 2000
+    assert sizes[1] <= sizes[0] // 2          # real coarsening, level 1
+    assert art.n_coarse <= 256                 # bottomed out in direct range
+
+
+def test_shared_vcycle_driver_used_by_geometric_mg():
+    """The geometric path now runs through the same Level/v_cycle
+    abstraction as AMG (refactor regression)."""
+    from repro.data.poisson import poisson2d_vc
+    xs = jnp.linspace(0, 1, 16)
+    X, Y = jnp.meshgrid(xs, xs, indexing="ij")
+    kappa = 1.0 + 0.3 * jnp.sin(2 * jnp.pi * X) * jnp.sin(2 * jnp.pi * Y)
+    pre = mg.MultigridPreconditioner(kappa)
+    assert isinstance(pre._hier[0], mg.Level)
+    assert pre._hier[-1].coarse_solve is not None
+    r = jnp.ones(16 * 16)
+    z = pre(r)
+    assert z.shape == r.shape and bool(jnp.all(jnp.isfinite(z)))

@@ -295,3 +295,114 @@ def test_ilu_exact_on_tridiagonal():
     np.testing.assert_allclose(np.asarray(M(b)),
                                np.asarray(jnp.linalg.solve(A.todense(), b)),
                                rtol=1e-10, atol=1e-10)
+
+
+# ---------------------------------------------------------------------------
+# zero-pivot guard (PR 4): scaled diagonal perturbation instead of NaNs
+# ---------------------------------------------------------------------------
+
+def test_zero_pivot_perturbed_with_warning_not_nan():
+    """A structurally-present but numerically-zero pivot used to yield NaNs
+    (no pivoting); the guard perturbs it to ±τ and warns."""
+    import warnings
+    Z = SparseTensor(np.array([0.0, 1.0, 1.0, 0.0]),
+                     np.array([0, 0, 1, 1]), np.array([0, 1, 0, 1]), (2, 2))
+    b = jnp.asarray([1.0, 2.0])
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        x = Z.solve(b, backend="direct")
+    assert any("pivot" in str(w.message) for w in rec), rec
+    assert bool(jnp.all(jnp.isfinite(x)))
+    # the perturbed factors solve a τ-nearby matrix: still ~8 digits here
+    np.testing.assert_allclose(np.asarray(x), [2.0, 1.0], rtol=1e-6)
+
+
+def test_zero_pivot_guard_off_reproduces_nan():
+    Z_art = symbolic_factor(np.array([0, 0, 1, 1]), np.array([0, 1, 0, 1]), 2)
+    val = jnp.asarray([0.0, 1.0, 1.0, 0.0])
+    C_bad = numeric_factor(Z_art, val, pivot_guard=False)
+    assert not bool(jnp.all(jnp.isfinite(
+        factored_solve(Z_art, C_bad, jnp.asarray([1.0, 2.0])))))
+    C_ok = numeric_factor(Z_art, val)            # guard on by default
+    x = factored_solve(Z_art, C_ok, jnp.asarray([1.0, 2.0]))
+    assert bool(jnp.all(jnp.isfinite(x)))
+
+
+def test_healthy_pivots_unperturbed(A):
+    """The guard is a no-op (bit-identical factors) on well-pivoted
+    matrices — no warning, no accuracy change."""
+    import warnings
+    art = symbolic_factor(np.asarray(A.row), np.asarray(A.col), A.shape[0])
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")           # any warning fails the test
+        C = numeric_factor(art, A.val)
+    C_ref = numeric_factor(art, A.val, pivot_guard=False)
+    np.testing.assert_array_equal(np.asarray(C), np.asarray(C_ref))
+
+
+# ---------------------------------------------------------------------------
+# sparse slogdet on the cached factors (PR 4)
+# ---------------------------------------------------------------------------
+
+def test_slogdet_sparse_matches_dense(A):
+    s, l = A.slogdet()
+    sd, ld = np.linalg.slogdet(np.asarray(A.todense()))
+    assert float(s) == sd
+    np.testing.assert_allclose(float(l), ld, rtol=1e-12)
+
+
+def test_slogdet_sign_tracking_indefinite():
+    """Negative pivots of an indefinite LDLᵀ must flow into the sign."""
+    D = poisson2d(6)
+    vals = np.asarray(D.val).copy()
+    r_, c_ = np.asarray(D.row), np.asarray(D.col)
+    vals[r_ == c_] -= 3.0                        # shift into indefiniteness
+    Dn = SparseTensor(vals, D.row, D.col, D.shape)
+    s, l = Dn.slogdet()
+    sd, ld = np.linalg.slogdet(np.asarray(Dn.todense()))
+    assert float(s) == sd
+    np.testing.assert_allclose(float(l), ld, rtol=1e-6)
+
+
+def test_slogdet_gradient_matches_dense(A):
+    g = jax.grad(lambda v: A.with_values(v).slogdet()[1])(A.val)
+    gd = jax.grad(lambda v: jnp.linalg.slogdet(
+        A.with_values(v).todense())[1])(A.val)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(gd),
+                               rtol=1e-8, atol=1e-10)
+
+
+def test_slogdet_nonsymmetric_lu_path():
+    B = _convection(40)
+    s, l = B.slogdet()
+    sd, ld = np.linalg.slogdet(np.asarray(B.todense()))
+    assert float(s) == sd
+    np.testing.assert_allclose(float(l), ld, rtol=1e-10)
+    g = jax.grad(lambda v: B.with_values(v).slogdet()[1])(B.val)
+    gd = jax.grad(lambda v: jnp.linalg.slogdet(
+        B.with_values(v).todense())[1])(B.val)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(gd),
+                               rtol=1e-8, atol=1e-10)
+
+
+def test_slogdet_shares_factors_with_direct_solve(A):
+    """slogdet rides the plan engine: a prior backend='direct' solve leaves
+    memoized factors, and the slogdet forward reuses them outright."""
+    b = jnp.ones(A.shape[0])
+    reset_plan_stats()
+    A.solve(b, backend="direct")
+    assert PLAN_STATS["factorize"] == 1, PLAN_STATS
+    A.slogdet()
+    assert PLAN_STATS["factorize"] == 1, PLAN_STATS    # reused, not re-run
+    assert PLAN_STATS["analyze"] == 1, PLAN_STATS      # same plan object
+
+
+def test_slogdet_batched_falls_back_dense():
+    A = poisson2d(8)
+    vals = jnp.stack([A.val, 2.0 * A.val])
+    Ab = SparseTensor(vals, A.row, A.col, A.shape, props=A.props)
+    s, l = Ab.slogdet()
+    for i, sc in enumerate((1.0, 2.0)):
+        sd, ld = np.linalg.slogdet(sc * np.asarray(A.todense()))
+        assert float(s[i]) == sd
+        np.testing.assert_allclose(float(l[i]), ld, rtol=1e-10)

@@ -318,6 +318,71 @@ def test_schwarz_distributed_gradients():
     assert float(out.split("SG")[1]) < 1e-8
 
 
+def test_two_level_schwarz_beats_one_level_and_scales():
+    """precond='schwarz2' (symmetric deflated two-level: aggregated global
+    coarse matrix, cached direct factors) needs FEWER CG iterations than
+    one-level schwarz at 8 shards on 2-D Poisson, and its count grows
+    sublinearly from 2 → 8 shards."""
+    out = run_forced(PREAMBLE + textwrap.dedent("""
+        from repro.data.poisson import poisson2d
+        ng = 48
+        A2 = poisson2d(ng)
+        n2 = ng * ng
+        v2, r2, c2 = (np.asarray(A2.val), np.asarray(A2.row),
+                      np.asarray(A2.col))
+        b2v = np.random.default_rng(3).normal(size=n2)
+        its = {}
+        for p in (2, 8):
+            meshp = jax.sharding.Mesh(np.array(jax.devices()[:p]), ("data",))
+            Dp = DSparseTensor.from_global(v2, r2, c2, (n2, n2), meshp)
+            bp = Dp.stack_vector(b2v)
+            _, i1 = Dp.solve_with_info(bp, tol=1e-8, maxiter=4000,
+                                       precond="schwarz")
+            _, i2 = Dp.solve_with_info(bp, tol=1e-8, maxiter=4000,
+                                       precond="schwarz2")
+            assert bool(i1.converged) and bool(i2.converged)
+            its[p] = (int(i1.iters), int(i2.iters))
+        print("IT2", its[2][0], its[2][1])
+        print("IT8", its[8][0], its[8][1])
+    """))
+    one2, two2 = map(int, out.split("IT2")[1].split()[:2])
+    one8, two8 = map(int, out.split("IT8")[1].split()[:2])
+    assert two8 < one8, (two8, one8)                 # two-level wins at P=8
+    # sublinear growth 2 → 8 shards (4× shards, far less than 4× iters)
+    assert two8 <= 2 * two2, (two2, two8)
+
+
+def test_two_level_schwarz_gradients_and_plan_reuse():
+    """Gradients flow through schwarz2 (replicated coarse factor rides the
+    shard_map state), match the single-device reference, and the sweep +
+    backward still analyze once."""
+    out = run_forced(PREAMBLE + textwrap.dedent("""
+        reset_plan_stats()
+        for tol in (1e-6, 1e-10):
+            D.solve(bs, tol=tol, maxiter=4000, precond="schwarz2")
+        g = jax.grad(lambda lv: jnp.sum(D.with_values(lv).solve(
+            bs, tol=1e-13, maxiter=4000, precond="schwarz2") ** 2))(D.lval)
+        print("ANALYZE", PLAN_STATS["analyze"])
+        print("REUSE", PLAN_STATS["setup_reuse"])
+        def loss_single(v):
+            x = As.with_values(v).solve(jnp.asarray(b), backend="jnp",
+                                        method="cg", tol=1e-13, maxiter=4000)
+            return jnp.sum(x ** 2)
+        gs = jax.grad(loss_single)(jnp.asarray(vals))
+        bounds = partition_simple(n, 8)
+        gv = np.zeros(len(vals))
+        for q in range(8):
+            s, e = bounds[q], bounds[q + 1]
+            m = (rows >= s) & (rows < e)
+            gv[m] = np.asarray(g)[q][:m.sum()]
+        print("SG", (np.abs(gv - np.asarray(gs))
+                     / np.abs(np.asarray(gs)).max()).max())
+    """))
+    assert int(out.split("ANALYZE")[1].split()[0]) == 1, out
+    assert int(out.split("REUSE")[1].split()[0]) >= 1, out
+    assert float(out.split("SG")[1]) < 1e-8
+
+
 def test_dsparse_list_shared_pattern_single_analysis():
     """DSparseTensorList members sharing one partitioned pattern route
     through ONE plan (a single analyze serves the whole batch)."""
@@ -339,15 +404,20 @@ def test_dsparse_list_shared_pattern_single_analysis():
 
 def test_distributed_slogdet_gather_fallback():
     """slogdet gathers to one host, rebuilds a SparseTensor, delegates —
-    and still warns about scalability."""
+    within DIRECT_BUDGET that is now the sparse cached-LDLᵀ path (no
+    densification; PLAN_STATS['factorize'] proves it), and the gather is
+    still warned about."""
     out = run_forced(PREAMBLE + textwrap.dedent("""
         import warnings
+        reset_plan_stats()
         with warnings.catch_warnings(record=True) as rec:
             warnings.simplefilter("always")
             sign, logabs = D.slogdet()
         assert any("slogdet" in str(w.message) for w in rec), rec
+        print("FACT", PLAN_STATS["factorize"])
         sr, lr_ = np.linalg.slogdet(np.asarray(As.todense()))
         print("SLD", abs(float(sign) - sr) + abs(float(logabs) - lr_) /
               abs(lr_))
     """))
+    assert int(out.split("FACT")[1].split()[0]) == 1, out   # LDLᵀ, not dense
     assert float(out.split("SLD")[1]) < 1e-10
