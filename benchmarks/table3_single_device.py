@@ -7,16 +7,31 @@ auto-dispatch policy constants.  Columns: backend time, peak-memory estimate,
 final residual — mirroring the paper's layout.  The ``direct`` rows exercise
 the cuDSS-analogue sparse LDLᵀ path (cached symbolic factorization, packed
 level-scheduled numeric kernel) up to the ``DIRECT_BUDGET`` crossover.
+
+``analyze_*`` rows time the symbolic stage itself — the cost every
+``symbolic_factor`` consumer (direct solves, ``precond="ilu"``, the AMG
+coarsest level, ``slogdet``) pays once per pattern: ``analyze_amd`` is the
+production quotient-graph-AMD + etree pipeline, ``analyze_md`` the retained
+exact-minimum-degree A/B path (smaller rungs only — exact MD is the cost
+the AMD pipeline replaced).  These rows flow into the bench-smoke
+``table3.csv`` / ``BENCH_table3.json`` CI artifacts, so the analyze-time
+trajectory is tracked per PR.
 """
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.dispatch import DENSE_BUDGET, DIRECT_BUDGET, make_config, get_plan
 from repro.core.adjoint import sparse_solve_with_info
+from repro.core.direct import symbolic_factor
 from repro.data.poisson import poisson2d, poisson2d_vc
 
 from .common import csv_row, timeit
+
+MD_ANALYZE_CAP = 10_000      # exact-MD A/B rung cap: the n=10⁴ rung is the
+                             # ISSUE-5 acceptance point (seed path ~14 s)
 
 SMOKE_LADDER = [32, 100]                # 1K, 10K DOF — per-PR CI smoke
 LADDER = [32, 100, 200, 400]            # 1K, 10K, 40K, 160K DOF
@@ -46,8 +61,28 @@ def run(full: bool = False, smoke: bool = False):
         # explicit backend="direct" tolerates a bigger one-time analyze than
         # the silent auto window — benchmark up to twice the auto budget
         if n <= 2 * DIRECT_BUDGET:
+            # symbolic-analyze time: the stage is paid once per pattern, so
+            # a single sample IS the amortized reality — and the SAME plan
+            # the timed get_plan analyzes then serves the direct solve rows
+            # below (no duplicate analysis).  Exact-MD A/B rung on the
+            # smaller sizes (it is the cost the AMD pipeline replaced).
             cfg_s = make_config(A, backend="direct")
+            t0 = time.perf_counter()
             plan = get_plan(A, cfg_s)      # symbolic analysis (once, eager)
+            t_amd = time.perf_counter() - t0
+            st_a = plan.artifacts["direct"].stats
+            entries["analyze_amd"] = (
+                t_amd, 0.0,
+                f"nnzL={st_a['nnz_L']};levels={st_a['n_levels']}")
+            if n <= MD_ANALYZE_CAP:
+                t0 = time.perf_counter()
+                art_m = symbolic_factor(np.asarray(A.row), np.asarray(A.col),
+                                        n, ordering="md")
+                t_md = time.perf_counter() - t0
+                entries["analyze_md"] = (
+                    t_md, 0.0,
+                    f"nnzL={art_m.stats['nnz_L']};"
+                    f"fill_vs_amd={st_a['nnz_L']/max(art_m.stats['nnz_L'], 1):.3f}")
             t, (x, info) = timeit(
                 jax.jit(lambda val, bb: sparse_solve_with_info(
                     cfg_s, A.with_values(val), bb)), A.val, b)

@@ -29,9 +29,11 @@ x_cg = A.solve(b, backend="jnp", method="cg", tol=1e-12)
 x_bi = A.solve(b, backend="jnp", method="bicgstab", tol=1e-12)
 print("cg vs bicgstab:", float(jnp.max(jnp.abs(x_cg - x_bi))))
 
-# sparse direct (the cuDSS-analogue backend): the symbolic factorization is
-# analyzed once per sparsity pattern and cached on the plan; re-solves and
-# gradients refactorize numerically at most once per values array
+# sparse direct (the cuDSS-analogue backend): the symbolic factorization —
+# quotient-graph AMD ordering + an etree-derived fill pattern (ordering="md"
+# retains exact minimum degree for A/B runs) — is analyzed once per sparsity
+# pattern and cached on the plan; re-solves and gradients refactorize
+# numerically at most once per values array
 x_dir = A.solve(b, backend="direct")        # LDLT (symmetric values)
 print("direct vs cg:", float(jnp.max(jnp.abs(x_dir - x_cg))))
 

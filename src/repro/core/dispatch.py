@@ -14,11 +14,12 @@ Five built-in backends behind one API — the TPU/JAX analogue of torch-sla's
 | dist      | mesh    | cg, bicgstab, pipelined_cg   | DSparseTensor (core/distributed)|
 
 The ``direct`` backend (:mod:`repro.core.direct`) is the paper's headline
-path: ``analyze`` computes the fill-reducing ordering + static fill pattern
-ONCE per pattern, ``setup`` is a jit/vmap-safe numeric refactorization memoized
-per values array (``PLAN_STATS["factorize"]``/``["setup_reuse"]``), and the
-adjoint reuses the forward factors — LDLᵀ is self-adjoint, LU swaps the
-triangular sweeps via a shared-artifact transpose plan.
+path: ``analyze`` computes the fill-reducing ordering (quotient-graph AMD by
+default) + the etree-derived static fill pattern ONCE per pattern, ``setup``
+is a jit/vmap-safe numeric refactorization memoized per values array
+(``PLAN_STATS["factorize"]``/``["setup_reuse"]``), and the adjoint reuses
+the forward factors — LDLᵀ is self-adjoint, LU swaps the triangular sweeps
+via a shared-artifact transpose plan.
 
 Plan lifecycle (paper §3.2.3 "one symbolic setup per pattern")
 --------------------------------------------------------------
@@ -72,11 +73,16 @@ from . import solvers as _solvers
 from .sparse import SparseTensor, build_bell, coo_matvec, has_full_diagonal
 
 DENSE_BUDGET = 4096          # TPU dense-direct crossover (measured, see EXPERIMENTS.md)
-DIRECT_BUDGET = 8192         # sparse-direct crossover on the silent auto path:
-                             # the eager Python symbolic analysis is a one-time
-                             # ~10 s at this size (measured), amortized across
-                             # the plan's lifetime; explicit backend="direct"
-                             # and illcond_hint accept larger systems
+DIRECT_BUDGET = 24576        # sparse-direct crossover on the silent auto path.
+                             # Raised 3× from 8192 when the quotient-graph AMD
+                             # ordering + etree symbolic pass replaced the
+                             # exact-MD Python elimination (~12× faster
+                             # analyze: 14.3 s -> 1.2 s at n = 10⁴, measured):
+                             # the one-time eager analysis near this ceiling is
+                             # now ~7-8 s (vs ~14 s at the OLD 8192 ceiling),
+                             # amortized across the plan's lifetime; explicit
+                             # backend="direct" and illcond_hint accept larger
+                             # systems
 DEFAULT_MAXITER = 2000
 
 # observable analyze/setup/cache counters (reset with ``reset_plan_stats``)

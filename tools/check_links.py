@@ -1,0 +1,94 @@
+"""Markdown link checker for the docs CI job — stdlib only, no network.
+
+    python tools/check_links.py README.md docs/architecture.md ROADMAP.md ...
+
+Checks every inline markdown link ``[text](target)``:
+
+* local file targets must exist (resolved relative to the containing file);
+* ``#anchor`` fragments pointing at a markdown file must match a heading in
+  that file (GitHub slug rules: lowercase, spaces → ``-``, punctuation
+  dropped);
+* ``http(s)``/``mailto`` targets are recorded but NOT fetched (CI must not
+  depend on the network); pass ``--list-external`` to print them.
+
+Exits nonzero with a per-link report when anything is broken.
+"""
+from __future__ import annotations
+
+import argparse
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+IMAGE_RE = re.compile(r"\!\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+CODE_FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style anchor slug: strip markdown/punctuation, lowercase,
+    spaces to dashes."""
+    h = re.sub(r"[`*_]", "", heading.strip()).lower()
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+def anchors_of(md_path: Path) -> set:
+    text = md_path.read_text(encoding="utf-8")
+    text = CODE_FENCE_RE.sub("", text)
+    return {slugify(m.group(1)) for m in HEADING_RE.finditer(text)}
+
+
+def check_file(md_path: Path, list_external: bool) -> list:
+    errors = []
+    text = md_path.read_text(encoding="utf-8")
+    stripped = CODE_FENCE_RE.sub("", text)
+    targets = [m.group(1) for m in LINK_RE.finditer(stripped)]
+    targets += [m.group(1) for m in IMAGE_RE.finditer(stripped)]
+    for target in targets:
+        if target.startswith(("http://", "https://", "mailto:")):
+            if list_external:
+                print(f"  external: {md_path}: {target}")
+            continue
+        path_part, _, fragment = target.partition("#")
+        if not path_part:                       # same-file #anchor
+            dest = md_path
+        else:
+            dest = (md_path.parent / path_part).resolve()
+            if not dest.exists():
+                errors.append(f"{md_path}: broken link -> {target}")
+                continue
+        if fragment and dest.suffix.lower() in (".md", ".markdown"):
+            if slugify(fragment) not in anchors_of(dest):
+                errors.append(
+                    f"{md_path}: missing anchor #{fragment} in {dest.name}")
+    return errors
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("files", nargs="+", help="markdown files to check")
+    ap.add_argument("--list-external", action="store_true",
+                    help="print (but do not fetch) external URLs")
+    args = ap.parse_args()
+    errors = []
+    n_links = 0
+    for f in args.files:
+        p = Path(f)
+        if not p.exists():
+            errors.append(f"{f}: file does not exist")
+            continue
+        stripped = CODE_FENCE_RE.sub("", p.read_text(encoding="utf-8"))
+        n_links += len(LINK_RE.findall(stripped))
+        errors.extend(check_file(p, args.list_external))
+    if errors:
+        print("\n".join(errors), file=sys.stderr)
+        print(f"FAIL: {len(errors)} broken link(s)", file=sys.stderr)
+        return 1
+    print(f"OK: {len(args.files)} file(s), {n_links} link(s) checked")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
