@@ -25,7 +25,8 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized subset of each suite (minutes, not tens)")
     ap.add_argument("--only", default=None,
-                    help="comma-separated subset: table3,table4,fig2,table5,fig3")
+                    help="comma-separated subset: "
+                         "table3,table4,fig2,table5,fig3,spmv")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows + failure count as JSON")
     args = ap.parse_args()
@@ -41,6 +42,9 @@ def main() -> None:
         from . import table4_distributed
         suites.append(("table4", lambda: table4_distributed.run(
             args.full, smoke=args.smoke)))
+    if only is None or "spmv" in only:
+        from . import spmv
+        suites.append(("spmv", lambda: spmv.run(args.full, smoke=args.smoke)))
     if only is None or "fig2" in only:
         from . import fig2_adjoint_vs_naive
         suites.append(("fig2", fig2_adjoint_vs_naive.run))

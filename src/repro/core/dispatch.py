@@ -58,6 +58,7 @@ assert reuse; ``register_backend`` adds custom backends either as a
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import weakref
 from functools import partial
@@ -97,12 +98,141 @@ PLAN_STATS: Dict[str, int] = {
     "t_partition": 0,      # distributed Aᵀ partitions built (once per plan)
     "coarsen": 0,          # AMG pattern coarsenings (symbolic, once/pattern)
     "galerkin": 0,         # AMG numeric Galerkin products (once/values array)
+    "kernel_plan": 0,      # BELL conversions run by the analyze-time kernel plan
+    "evictions": 0,        # plans dropped by the bounded LRU plan cache
 }
 
 
 def reset_plan_stats() -> None:
     for k in PLAN_STATS:
         PLAN_STATS[k] = 0
+
+
+# minimum BELL fill (nnz over padded slot capacity) for the kernel plan to
+# adopt the block-ELL layout on its own; below it the padding work outweighs
+# the dense-tile win and the plan records a segment-sum fallback.  1/64 keeps
+# 2-D Poisson (fill ≈ 0.02 at bm=8, bn=128) on the kernel path.
+BELL_MIN_FILL = 1.0 / 64.0
+
+# fused CG/BiCGStab step kernels (kernels/solve_step.py): "auto" enables them
+# when the Pallas kernels compile (TPU/GPU) and keeps the plain XLA loops in
+# interpret mode (CPU), where an emulated kernel per iteration would be a
+# slowdown; "on"/"off" force either path (benchmarks and parity tests).
+# Read at solve-trace time, not frozen into the plan.
+FUSED_STEP = "auto"
+
+PLAN_CACHE_CAP = 32          # per-pattern plan cache bound (LRU)
+
+
+class PlanCache(collections.OrderedDict):
+    """Pattern-keyed plan cache with a small LRU bound.
+
+    Plans are cheap to hold but a long-running server sweeping configs on one
+    tensor would otherwise grow the dict without bound; evictions count in
+    ``PLAN_STATS["evictions"]``.  Shared by ``with_values`` views exactly like
+    the plain dict it replaces."""
+
+    def __init__(self, cap: Optional[int] = None):
+        super().__init__()
+        self.cap = PLAN_CACHE_CAP if cap is None else cap
+
+    def get(self, key, default=None):
+        if key in self:
+            self.move_to_end(key)
+            return super().get(key)
+        return default
+
+    def __setitem__(self, key, value):
+        if key not in self:
+            while len(self) >= self.cap:
+                self.popitem(last=False)
+                PLAN_STATS["evictions"] += 1
+        super().__setitem__(key, value)
+        self.move_to_end(key)
+
+
+@dataclasses.dataclass
+class KernelPlan:
+    """Analyze-time matvec kernel choice — a frozen plan artifact.
+
+    ``choice``: "bell" | "stencil" | "coo"; ``reason`` records why (fill
+    ratio, traced pattern, interpret-mode platform) for observability.
+    ``interpret`` is the platform-resolved Pallas flag threaded into every
+    kernel launch; ``bell``/``t_bell`` are the (meta, block_cols, perm)
+    layouts of A and Aᵀ built in the same analyze pass so the adjoint's
+    backward matvec shares the conversion (``t_bell is bell`` for symmetric
+    patterns)."""
+    choice: str
+    reason: str
+    interpret: bool
+    bell: Optional[tuple] = None
+    t_bell: Optional[tuple] = None
+
+
+def _build_kernel_plan(pattern, prefer: str) -> KernelPlan:
+    """Freeze the matvec kernel for one analyzed pattern.
+
+    ``prefer`` is the backend's kernel preference: "stencil" (stencil
+    backend), "bell" (pallas backend — explicit opt-in, adopted even in
+    interpret mode), "auto" (jnp backend — BELL only where it is profitable
+    AND compiles), "coo" (never convert).  Runs inside ``analyze``'s
+    ``ensure_compile_time_eval`` so the slot tables are concrete."""
+    from ..kernels.solve_step import default_interpret
+    interp = default_interpret()
+    if prefer == "stencil":
+        if pattern.stencil is not None:
+            return KernelPlan("stencil", "stencil layout present", interp)
+        prefer = "auto"
+    if prefer == "coo":
+        return KernelPlan("coo", "backend prefers segment-sum", interp)
+    if prefer == "auto" and interp:
+        # interpret-mode Pallas is an emulation — segment_sum wins on CPU
+        return KernelPlan("coo", "interpret-mode platform", interp)
+    concrete = not isinstance(pattern.row, jax.core.Tracer)
+    bell = pattern.bell                     # construction-time layout, if any
+    if bell is None:
+        if not concrete:
+            return KernelPlan("coo", "traced pattern (no eager conversion)",
+                              interp)
+        bell = build_bell(pattern.row, pattern.col, pattern.shape)
+        PLAN_STATS["kernel_plan"] += 1
+    meta = bell[0]
+    if prefer != "bell" and meta.fill < BELL_MIN_FILL:
+        return KernelPlan(
+            "coo", f"bell fill {meta.fill:.4f} < {BELL_MIN_FILL:.4f}", interp)
+    n, m = pattern.shape
+    if n == m and pattern.props.get("symmetric", False):
+        t_bell = bell                       # Aᵀ shares A's layout outright
+    elif concrete:
+        t_bell = build_bell(pattern.col, pattern.row, (m, n))
+        PLAN_STATS["kernel_plan"] += 1
+    else:
+        t_bell = None          # traced indices: adjoint takes the generic path
+    return KernelPlan("bell", f"fill={meta.fill:.4f}", interp, bell, t_bell)
+
+
+def _fuse_enabled(kp: Optional[KernelPlan]) -> bool:
+    if FUSED_STEP == "on":
+        return True
+    if FUSED_STEP == "off" or kp is None:
+        return False
+    return not kp.interpret
+
+
+def _plan_matvec(plan: "SolverPlan", kp: KernelPlan, val) -> Callable:
+    """Single-instance matvec closure through the kernel plan's choice."""
+    n = plan.shape[0]
+    if kp.choice == "stencil" and plan.stencil is not None:
+        from ..kernels import ops as kops
+        return lambda x: kops.stencil5_matvec(plan.stencil, val, x)
+    if kp.choice == "bell" and kp.bell is not None:
+        from ..kernels import ops as kops
+        meta, block_cols, perm = kp.bell
+        interp = kp.interpret
+        return lambda x: kops.bell_matvec(meta, block_cols, perm, val, x, n,
+                                          interp)
+    row, col = plan.row, plan.col
+    return lambda x: coo_matvec(val, row, col, x, n)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -319,27 +449,52 @@ class IterativeBackend(Backend):
     a tolerance sweep or the symmetric adjoint backward re-traces nothing
     (``PLAN_STATS['setup_reuse']``); new values still refresh.
     """
-    kernel = "coo"
+    kernel = "auto"             # kernel-plan preference (see _build_kernel_plan)
     methods = ("cg", "bicgstab", "gmres")
     cache_setup = True
 
     def analyze(self, cfg, pattern):
-        return {"precond": _precond.PreconditionerPlan(
-            cfg.precond, pattern.row, pattern.col, pattern.shape,
-            stencil=pattern.stencil)}
+        return {
+            "kernel": _build_kernel_plan(pattern, self.kernel),
+            "precond": _precond.PreconditionerPlan(
+                cfg.precond, pattern.row, pattern.col, pattern.shape,
+                stencil=pattern.stencil)}
 
     def setup(self, plan, A):
-        fn = _kernel_fn(A, self.kernel)
-        mv = lambda x: fn(A.val, x)
-        M = plan.artifacts["precond"].refresh(A, mv)
-        return mv, M
+        kp = plan.artifacts.get("kernel")
+        if kp is not None:
+            mv = _plan_matvec(plan, kp, A.val)
+        else:                    # plan built without a kernel artifact
+            fn = _kernel_fn(A, self.kernel)
+            mv = lambda x: fn(A.val, x)
+        fuse = _fuse_enabled(kp)
+        pre = plan.artifacts["precond"]
+        M = pre.refresh(A, mv, fused=fuse)
+        # diagonal-inverse vector for the fused step kernels (None when the
+        # apply is not a diagonal scale); cheap, so prepared unconditionally —
+        # the fuse decision itself stays a solve-time read of FUSED_STEP
+        dinv = pre.fused_diag(A)
+        return mv, M, dinv
 
     def solve(self, plan, state, A, b, x0, cfg):
-        mv, M = state
+        mv, M, dinv = state
+        kp = plan.artifacts.get("kernel")
+        fuse = _fuse_enabled(kp)
+        interp = kp.interpret if kp is not None else None
         if cfg.method == "cg":
+            if fuse:
+                return _solvers.cg_fused(mv, b, x0, dinv=dinv, M=M,
+                                         tol=cfg.tol, atol=cfg.atol,
+                                         maxiter=cfg.maxiter,
+                                         interpret=interp)
             return _solvers.cg(mv, b, x0, M=M, tol=cfg.tol, atol=cfg.atol,
                                maxiter=cfg.maxiter)
         if cfg.method == "bicgstab":
+            if fuse:
+                return _solvers.bicgstab_fused(mv, b, x0, dinv=dinv, M=M,
+                                               tol=cfg.tol, atol=cfg.atol,
+                                               maxiter=cfg.maxiter,
+                                               interpret=interp)
             return _solvers.bicgstab(mv, b, x0, M=M, tol=cfg.tol,
                                      atol=cfg.atol, maxiter=cfg.maxiter)
         if cfg.method == "gmres":
@@ -349,18 +504,57 @@ class IterativeBackend(Backend):
         raise ValueError(
             f"unknown method {cfg.method!r} for backend {cfg.backend!r}")
 
+    def transpose_plan(self, plan):
+        """Adjoint plan sharing THIS plan's kernel layouts: the kernel plan
+        built Aᵀ's block-ELL slot table in the same analyze pass (``t_bell``),
+        so the backward matvec hits the same Pallas kernel with zero
+        re-analysis.  Only for plans that adopted BELL — COO-choice plans
+        have no layout to share and fall back to the generic transposed
+        sibling; ``mg`` needs the stencil view the sibling would drop."""
+        kp = plan.artifacts.get("kernel")
+        if kp is None or kp.choice != "bell" or kp.t_bell is None:
+            return None
+        n, m = plan.shape
+        if n != m or plan.cfg.precond == "mg":
+            return None
+        tp = SolverPlan.__new__(SolverPlan)
+        tp.cfg = plan.cfg
+        tp.backend = plan.backend
+        tp.row, tp.col = plan.col, plan.row
+        tp.shape = (m, n)
+        tp.props = dict(plan.props)
+        tp.bell, tp.stencil = kp.t_bell, None
+        tp._cache = {tp.cfg.plan_key(): tp}
+        tp._tplan = plan
+        tp._setup_memo = {}      # Aᵀ preconditioner state differs
+        with jax.ensure_compile_time_eval():
+            tp.artifacts = {
+                "kernel": dataclasses.replace(kp, bell=kp.t_bell,
+                                              t_bell=kp.bell),
+                "precond": _precond.PreconditionerPlan(
+                    plan.cfg.precond, tp.row, tp.col, tp.shape,
+                    stencil=None)}
+        return tp
+
 
 class JnpBackend(IterativeBackend):
+    """General COO backend.  Its kernel plan is "auto": segment-sum on
+    interpret-mode platforms (CPU) and for low-fill patterns, block-ELL
+    Pallas where the conversion pays off on compiled hardware."""
     name = "jnp"
-    kernel = "coo"
+    kernel = "auto"
 
 
 class PallasBackend(IterativeBackend):
+    """Explicit block-ELL opt-in: the kernel plan adopts BELL regardless of
+    fill or platform (interpret mode included — parity tests run here)."""
     name = "pallas"
     kernel = "bell"
 
     def applicable(self, A):
-        return A.bell is not None
+        # a construction-time layout OR a concrete pattern the kernel plan
+        # can convert at analyze time
+        return A.bell is not None or not isinstance(A.row, jax.core.Tracer)
 
 
 class StencilBackend(IterativeBackend):
@@ -418,6 +612,7 @@ class StencilBackend(IterativeBackend):
         with jax.ensure_compile_time_eval():
             tp.artifacts = {
                 "tmap": jnp.asarray(tmap.reshape(-1), jnp.int32),
+                "kernel": _build_kernel_plan(tp, "stencil"),
                 "precond": _precond.PreconditionerPlan(
                     plan.cfg.precond, plan.row, plan.col, plan.shape,
                     stencil=plan.stencil)}
@@ -787,7 +982,7 @@ def get_plan(A: SparseTensor, cfg: Optional[SolverConfig] = None,
         cfg = cfg.resolved(A)
     cache = getattr(A, "_plans", None)
     if cache is None:
-        cache = {}
+        cache = PlanCache()
         try:
             A._plans = cache
         except AttributeError:

@@ -263,7 +263,8 @@ class DSparseTensor:
         # per pattern by analyze); kept only for constructor/pytree compat
         self.lval_t, self.lrow_t, self.lcol_t = lval_t, lrow_t, lcol_t
         self.mesh = mesh
-        self._plans = {}
+        from .sparse import _plan_cache
+        self._plans = _plan_cache()
 
     def tree_flatten(self):
         return ((self.lval, self.lrow, self.lcol, self.lval_t, self.lrow_t,

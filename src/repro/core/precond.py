@@ -97,11 +97,15 @@ def block_jacobi(val, row, col, n: int, block: int = 128):
     return _bj_apply(inv, n, nb, block)
 
 
-def chebyshev(matvec: Callable, lam_min: float, lam_max: float, degree: int = 8):
+def chebyshev(matvec: Callable, lam_min: float, lam_max: float, degree: int = 8,
+              fused: bool = False, interpret: Optional[bool] = None):
     """Chebyshev-polynomial approximation of A⁻¹ on [lam_min, lam_max].
 
     Pure matvec recurrence — ideal for TPU and for the distributed backend
-    (no extra reductions).  Beyond-paper addition."""
+    (no extra reductions).  Beyond-paper addition.  With ``fused=True`` the
+    inner d/x axpy pair runs as one Pallas pass per degree
+    (:func:`repro.kernels.solve_step.fused_cheb_step`); the recurrence is
+    unchanged."""
     theta = 0.5 * (lam_max + lam_min)
     delta = 0.5 * (lam_max - lam_min)
     sigma = theta / delta
@@ -112,10 +116,17 @@ def chebyshev(matvec: Callable, lam_min: float, lam_max: float, degree: int = 8)
         rk = r - matvec(x)
         rho_k = 1.0 / sigma
         dk = x
+        if fused:
+            from ..kernels import solve_step as _fk
         for _ in range(degree - 1):
             rho_k1 = 1.0 / (2.0 * sigma - rho_k)
-            dk = rho_k1 * rho_k * dk + (2.0 * rho_k1 / delta) * rk
-            x = x + dk
+            if fused:
+                x, dk = _fk.fused_cheb_step(x, dk, rk, rho_k1 * rho_k,
+                                            2.0 * rho_k1 / delta,
+                                            interpret=interpret)
+            else:
+                dk = rho_k1 * rho_k * dk + (2.0 * rho_k1 / delta) * rk
+                x = x + dk
             rk = rk - matvec(dk)
             rho_k = rho_k1
         return x
@@ -204,8 +215,22 @@ class PreconditionerPlan:
                     "(aggregation and the Galerkin programs are eager)")
             self._amg = _mg.amg_symbolic(r, c, self.shape[0])
 
-    def refresh(self, A, matvec: Callable) -> Callable:
-        """values-dependent stage — traced-safe; one call per solver setup."""
+    def fused_diag(self, A) -> Optional[jax.Array]:
+        """Diagonal-inverse vector for the fused step kernels
+        (:mod:`repro.kernels.solve_step`), or None when the apply is not a
+        pure diagonal scale — the fused solvers then keep the ``refresh``
+        closure outside the fused pass (partial fusion)."""
+        if self.name == "none":
+            return jnp.ones(self.shape[0], A.dtype)
+        if self.name == "jacobi":
+            d = A.diagonal()
+            return jnp.where(jnp.abs(d) > 1e-30, 1.0 / d, 1.0)
+        return None
+
+    def refresh(self, A, matvec: Callable, fused: bool = False) -> Callable:
+        """values-dependent stage — traced-safe; one call per solver setup.
+        ``fused`` routes multi-pass applies (Chebyshev) through the fused
+        step kernels where they have one."""
         if self.name == "none":
             return identity()
         if self.name == "jacobi":
@@ -220,7 +245,8 @@ class PreconditionerPlan:
         if self.name == "chebyshev":
             lmin, lmax = estimate_spectrum(matvec, self.shape[0], A.dtype)
             lmin = jnp.maximum(lmin, lmax * 1e-4)
-            return chebyshev(matvec, lmin, lmax, degree=self.degree)
+            return chebyshev(matvec, lmin, lmax, degree=self.degree,
+                             fused=fused)
         if self.name == "mg":
             from .multigrid import MultigridPreconditioner
             nx, ny = self.stencil.nx, self.stencil.ny

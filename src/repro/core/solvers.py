@@ -20,7 +20,8 @@ import jax.numpy as jnp
 from jax import lax
 
 __all__ = [
-    "SolveInfo", "cg", "bicgstab", "gmres", "cg_scan",
+    "SolveInfo", "cg", "cg_fused", "bicgstab", "bicgstab_fused",
+    "gmres", "cg_scan",
     "dense_solve", "newton_solve", "picard_solve", "anderson_solve",
     "lobpcg", "lanczos",
 ]
@@ -126,6 +127,154 @@ def bicgstab(matvec: Callable, b: jax.Array, x0: Optional[jax.Array] = None, *,
     st0 = (x0, r0, r0, z, z, one, one, one, jnp.array(0), jnp.array(True))
     x, r, *_, k, _ = lax.while_loop(cond, body, st0)
     rn = jnp.sqrt(dot(r, r))
+    return x, SolveInfo(k, rn, rn <= target)
+
+
+def cg_fused(matvec: Callable, b: jax.Array, x0: Optional[jax.Array] = None, *,
+             dinv: Optional[jax.Array] = None, M: Callable = _identity,
+             tol: float = 1e-6, atol: float = 0.0, maxiter: int = 1000,
+             min_iter: int = 0, interpret: Optional[bool] = None):
+    """CG with the iteration fused into Pallas step kernels (single device).
+
+    With a diagonal preconditioner (``dinv`` given) this is the merged
+    Chronopoulos–Gear recurrence: α comes from α' = ρ'/(δ − βρ'/α) with
+    δ = <Az, z>, so the standalone p·Ap reduction pass vanishes and each
+    iteration is one matvec plus exactly two fused vector sweeps
+    (``fused_cg_update`` and ``fused_cg_direction``).  The recurrence is
+    algebraically identical to Hestenes–Stiefel (same iterates in exact
+    arithmetic); the residual-based stopping rule absorbs the small
+    floating-point divergence.
+
+    Without ``dinv`` (external preconditioner closure ``M``) the textbook
+    recurrence is kept and only the axpy/convergence-dot passes fuse
+    (``fused_cg_halfstep``).
+    """
+    from ..kernels import solve_step as _fk
+
+    x0 = jnp.zeros_like(b) if x0 is None else x0
+    dot = lambda u, v: jnp.sum(u * v)
+    bnorm = jnp.sqrt(dot(b, b))
+    target = jnp.maximum(tol * bnorm, atol)
+    eps = jnp.asarray(1e-30, b.dtype)
+
+    r0 = b - matvec(x0)
+    rr0 = dot(r0, r0)
+
+    if dinv is not None:
+        z0 = dinv * r0
+        p0 = z0
+        s0 = matvec(p0)
+        rho0 = dot(r0, z0)
+        alpha0 = rho0 / (dot(p0, s0) + eps)
+
+        def cond(st):
+            x, r, p, s, rho, rr, alpha, k = st
+            return (k < maxiter) & ((jnp.sqrt(rr) > target) | (k < min_iter))
+
+        def body(st):
+            x, r, p, s, rho, rr, alpha, k = st
+            x, r, z, rho_new, rr_new = _fk.fused_cg_update(
+                x, r, p, s, dinv, alpha, interpret=interpret)
+            w = matvec(z)
+            beta = rho_new / (rho + eps)
+            p, s, delta = _fk.fused_cg_direction(
+                z, w, p, s, beta, interpret=interpret)
+            alpha_new = rho_new / (delta - beta * rho_new / (alpha + eps) + eps)
+            return (x, r, p, s, rho_new, rr_new, alpha_new, k + 1)
+
+        st0 = (x0, r0, p0, s0, rho0, rr0, alpha0, jnp.array(0))
+        x, r, p, s, rho, rr, alpha, k = lax.while_loop(cond, body, st0)
+    else:
+        z0 = M(r0)
+        p0 = z0
+        rz0 = dot(r0, z0)
+
+        def cond(st):
+            x, r, p, rz, rr, k = st
+            return (k < maxiter) & ((jnp.sqrt(rr) > target) | (k < min_iter))
+
+        def body(st):
+            x, r, p, rz, rr, k = st
+            Ap = matvec(p)
+            alpha = rz / (dot(p, Ap) + eps)
+            x, r, rr_new = _fk.fused_cg_halfstep(
+                x, r, p, Ap, alpha, interpret=interpret)
+            z = M(r)
+            rz_new = dot(r, z)
+            p = z + (rz_new / (rz + eps)) * p
+            return (x, r, p, rz_new, rr_new, k + 1)
+
+        st0 = (x0, r0, p0, rz0, rr0, jnp.array(0))
+        x, r, p, rz, rr, k = lax.while_loop(cond, body, st0)
+
+    rn = jnp.sqrt(rr)
+    return x, SolveInfo(k, rn, rn <= target)
+
+
+def bicgstab_fused(matvec: Callable, b: jax.Array,
+                   x0: Optional[jax.Array] = None, *,
+                   dinv: Optional[jax.Array] = None, M: Callable = _identity,
+                   tol: float = 1e-6, atol: float = 0.0, maxiter: int = 1000,
+                   interpret: Optional[bool] = None):
+    """BiCGStab with fused Pallas step kernels (single device).
+
+    Same recurrence as :func:`bicgstab`; the vector passes fuse into
+    ``fused_bicg_p`` / ``fused_bicg_s`` (diagonal preconditioner folded in),
+    ``fused_dots2`` (ω numerator+denominator in one read), and
+    ``fused_bicg_tail`` (x/r updates plus next iteration's head dot <r̂,r'>
+    and the convergence dot <r',r'>, carried through the loop state).
+    """
+    from ..kernels import solve_step as _fk
+
+    x0 = jnp.zeros_like(b) if x0 is None else x0
+    dot = lambda u, v: jnp.sum(u * v)
+    bnorm = jnp.sqrt(dot(b, b))
+    target = jnp.maximum(tol * bnorm, atol)
+    eps = jnp.asarray(1e-30, b.dtype)
+
+    r0 = b - matvec(x0)
+    rr0 = dot(r0, r0)
+
+    def cond(st):
+        x, r, rhat, p, v, rho_prev, rho_c, alpha, omega, rr, k, fresh = st
+        return (k < maxiter) & (jnp.sqrt(rr) > target)
+
+    def body(st):
+        x, r, rhat, p, v, rho_prev, rho_c, alpha, omega, rr, k, fresh = st
+        # ρ = <r̂, r> was computed by last iteration's tail pass (rho_c).
+        restart = (jnp.abs(rho_c) < 1e-12 * rr) | fresh
+        rhat = jnp.where(restart, r, rhat)
+        rho = jnp.where(restart, rr, rho_c)
+        beta = (rho / (rho_prev + eps)) * (alpha / (omega + eps))
+        beta = jnp.where(restart, 0.0, beta)
+        if dinv is not None:
+            p, phat = _fk.fused_bicg_p(r, p, v, dinv, beta, omega,
+                                       restart.astype(b.dtype),
+                                       interpret=interpret)
+        else:
+            p = jnp.where(restart, r, r + beta * (p - omega * v))
+            phat = M(p)
+        v = matvec(phat)
+        alpha = rho / (dot(rhat, v) + eps)
+        if dinv is not None:
+            s, shat = _fk.fused_bicg_s(r, v, dinv, alpha, interpret=interpret)
+        else:
+            s = r - alpha * v
+            shat = M(s)
+        t = matvec(shat)
+        ts, tt = _fk.fused_dots2(t, s, interpret=interpret)
+        omega_new = ts / (tt + eps)
+        x, r, rho_next, rr_new = _fk.fused_bicg_tail(
+            x, s, t, phat, shat, rhat, alpha, omega_new, interpret=interpret)
+        return (x, r, rhat, p, v, rho, rho_next, alpha, omega_new, rr_new,
+                k + 1, jnp.array(False))
+
+    z = jnp.zeros_like(b)
+    one = jnp.asarray(1.0, b.dtype)
+    st0 = (x0, r0, r0, z, z, one, rr0, one, one, rr0, jnp.array(0),
+           jnp.array(True))
+    x, r, *_, rr, k, _ = lax.while_loop(cond, body, st0)
+    rn = jnp.sqrt(rr)
     return x, SolveInfo(k, rn, rn <= target)
 
 

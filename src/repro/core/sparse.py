@@ -319,6 +319,14 @@ def build_bell(row, col, shape, bm: int = 8, bn: int = 128,
 # SparseTensor
 # ---------------------------------------------------------------------------
 
+def _plan_cache():
+    """Fresh bounded-LRU plan cache (:class:`repro.core.dispatch.PlanCache`).
+    Imported lazily: dispatch imports this module at module level, so the
+    cycle must break here."""
+    from .dispatch import PlanCache
+    return PlanCache()
+
+
 @jax.tree_util.register_pytree_node_class
 class SparseTensor:
     """A sparse matrix (or shared-pattern batch) with autograd-aware solvers.
@@ -346,7 +354,7 @@ class SparseTensor:
         self.props = props if props is not None else detect_properties(
             val, self.row, self.col, self.shape)
         self.stencil = stencil
-        self._plans = {}    # SolverConfig → SolverPlan (pattern-keyed cache)
+        self._plans = _plan_cache()  # plan_key → SolverPlan (bounded LRU)
         if bell is not None:
             self.bell = bell
         elif build_kernel_layout:
@@ -372,7 +380,7 @@ class SparseTensor:
         obj.props = dict(props)
         obj.stencil = stencil
         obj.bell = (bell_meta,) + tuple(children[3:]) if bell_meta is not None else None
-        obj._plans = {}
+        obj._plans = _plan_cache()
         return obj
 
     # -- basic ops ----------------------------------------------------------

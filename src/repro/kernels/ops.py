@@ -21,7 +21,9 @@ from .stencil5 import Stencil5Meta, stencil5_pallas
 
 
 def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
+    """Default Pallas interpret flag: emulate only off compiled backends."""
+    from .solve_step import default_interpret
+    return default_interpret()
 
 
 # ---------------------------------------------------------------------------
@@ -40,19 +42,23 @@ def bell_assemble(meta: BellMeta, perm: jax.Array, val: jax.Array) -> jax.Array:
     return flat.reshape(meta.n_rb, meta.k, meta.bm, meta.bn)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 5))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 5, 6))
 def bell_matvec(meta: BellMeta, block_cols: jax.Array, perm: jax.Array,
-                val: jax.Array, x: jax.Array, n: int) -> jax.Array:
+                val: jax.Array, x: jax.Array, n: int,
+                interpret: bool = None) -> jax.Array:
+    """``interpret=None`` resolves to the platform default; the plan engine
+    threads its analyze-time flag through here (kernel plans)."""
     bv = bell_assemble(meta, perm, val)
-    y = bell_spmv_pallas(meta, block_cols, bv, x, _interpret())
+    y = bell_spmv_pallas(meta, block_cols, bv, x, interpret)
     return y[:n]
 
 
-def _bell_mv_fwd(meta, block_cols, perm, val, x, n):
-    return bell_matvec(meta, block_cols, perm, val, x, n), (block_cols, perm, val, x)
+def _bell_mv_fwd(meta, block_cols, perm, val, x, n, interpret):
+    return (bell_matvec(meta, block_cols, perm, val, x, n, interpret),
+            (block_cols, perm, val, x))
 
 
-def _bell_mv_bwd(meta, n, res, g):
+def _bell_mv_bwd(meta, n, interpret, res, g):
     """The op is bilinear: ∂/∂x = Aᵀg (scatter over column blocks);
     ∂/∂val_e = g[row_e]·x[col_e], realized through the bell layout."""
     block_cols, perm, val, x = res

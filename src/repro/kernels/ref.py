@@ -27,6 +27,48 @@ def stencil5_ref(val5: jax.Array, x: jax.Array) -> jax.Array:
             + val5[3] * xw + val5[4] * xe)
 
 
+def fused_cg_update_ref(x, r, p, s, dinv, alpha):
+    xn = x + alpha * p
+    rn = r - alpha * s
+    zn = dinv * rn
+    return xn, rn, zn, jnp.sum(rn * zn), jnp.sum(rn * rn)
+
+
+def fused_cg_direction_ref(z, w, p, s, beta):
+    return z + beta * p, w + beta * s, jnp.sum(w * z)
+
+
+def fused_cg_halfstep_ref(x, r, p, s, alpha):
+    xn = x + alpha * p
+    rn = r - alpha * s
+    return xn, rn, jnp.sum(rn * rn)
+
+
+def fused_cheb_step_ref(x, dk, rk, c1, c2):
+    dn = c1 * dk + c2 * rk
+    return x + dn, dn
+
+
+def fused_dots2_ref(u, v):
+    return jnp.sum(u * v), jnp.sum(u * u)
+
+
+def fused_bicg_p_ref(r, p, v, dinv, beta, omega, restart):
+    pn = jnp.where(restart != 0, r, r + beta * (p - omega * v))
+    return pn, dinv * pn
+
+
+def fused_bicg_s_ref(r, v, dinv, alpha):
+    sn = r - alpha * v
+    return sn, dinv * sn
+
+
+def fused_bicg_tail_ref(x, s, t, phat, shat, rhat, alpha, omega):
+    xn = x + alpha * phat + omega * shat
+    rn = s - omega * t
+    return xn, rn, jnp.sum(rhat * rn), jnp.sum(rn * rn)
+
+
 def bell_matvec_ref(bell_vals: jax.Array, block_cols: jax.Array,
                     x_pad: jax.Array, n: int) -> jax.Array:
     """Block-ELL SpMV oracle.

@@ -37,13 +37,19 @@ def _kernel(cols_ref, vals_ref, x_ref, y_ref):
 @functools.partial(jax.jit, static_argnums=(0, 4))
 def bell_spmv_pallas(meta: BellMeta, block_cols: jax.Array,
                      bell_vals: jax.Array, x: jax.Array,
-                     interpret: bool = True) -> jax.Array:
+                     interpret: bool = None) -> jax.Array:
     """y = A @ x with A in block-ELL form.
 
     ``block_cols``: (n_rb, k) int32 column-block table (scalar-prefetched);
     ``bell_vals``: (n_rb, k, bm, bn); ``x``: (m,) — padded internally.
     Returns the padded y (n_pad,); ops.py truncates to n.
+
+    ``interpret=None`` auto-detects: compile on TPU/GPU, emulate elsewhere.
+    (Static argnum, so None resolves once at trace time.)
     """
+    if interpret is None:
+        from .solve_step import default_interpret
+        interpret = default_interpret()
     bm, bn, k, n_rb = meta.bm, meta.bn, meta.k, meta.n_rb
     xp = jnp.pad(x, (0, meta.m_pad - x.shape[0]))
     x2 = xp.reshape(meta.n_cb, bn)

@@ -129,3 +129,153 @@ def test_stencil_solve_path_matches_jnp():
     x_k = A_k.solve(f, backend="stencil", method="cg", tol=1e-12)
     x_j = A_j.solve(f, backend="jnp", method="cg", tol=1e-12)
     np.testing.assert_allclose(np.asarray(x_k), np.asarray(x_j), rtol=1e-8)
+
+
+def test_bell_empty_rows_and_cols():
+    """Rows/cols with no entries: the BELL slot table must still produce
+    exact zeros there, forward and transpose."""
+    rng = np.random.default_rng(4)
+    n, m = 200, 150
+    # entries confined to a band; rows 0–9 and 180–199, cols 140–149 empty
+    row = rng.integers(10, 180, 400).astype(np.int32)
+    col = rng.integers(0, 140, 400).astype(np.int32)
+    keys = np.unique(row.astype(np.int64) * m + col)
+    row = (keys // m).astype(np.int32)
+    col = (keys % m).astype(np.int32)
+    val = jnp.asarray(rng.normal(size=len(row)))
+    x = jnp.asarray(rng.normal(size=m))
+    meta, bcols, perm = build_bell(row, col, (n, m))
+    y = ops.bell_matvec(meta, bcols, perm, val, x, n)
+    y_c = coo_matvec(val, jnp.asarray(row), jnp.asarray(col), x, n)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_c), atol=1e-12)
+    assert float(jnp.abs(y[:10]).max()) == 0.0
+    assert float(jnp.abs(y[180:]).max()) == 0.0
+    # transpose layout (the kernel plan's t_bell): empty columns of A are
+    # empty rows of Aᵀ
+    tmeta, tbcols, tperm = build_bell(col, row, (m, n))
+    g = jnp.asarray(rng.normal(size=n))
+    yt = ops.bell_matvec(tmeta, tbcols, tperm, val, g, m)
+    yt_c = coo_matvec(val, jnp.asarray(col), jnp.asarray(row), g, m)
+    np.testing.assert_allclose(np.asarray(yt), np.asarray(yt_c), atol=1e-12)
+    assert float(jnp.abs(yt[140:]).max()) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# fused solver-step kernels (kernels/solve_step.py) vs the pure-jnp oracles
+# ---------------------------------------------------------------------------
+
+from repro.kernels import ref as _fref
+from repro.kernels import solve_step as _fk
+
+# kernel name → (vector-argument count, scalar-argument count)
+_FUSED_SIGS = {
+    "fused_cg_update": (5, 1),
+    "fused_cg_direction": (4, 1),
+    "fused_cg_halfstep": (4, 1),
+    "fused_cheb_step": (3, 2),
+    "fused_dots2": (2, 0),
+    "fused_bicg_p": (4, 3),
+    "fused_bicg_s": (3, 1),
+    "fused_bicg_tail": (6, 2),
+}
+
+
+def _fused_parity_case(name, n, dtype, seed):
+    n_vec, n_sc = _FUSED_SIGS[name]
+    rng = np.random.default_rng(seed)
+    vecs = [jnp.asarray(rng.normal(size=n).astype(dtype))
+            for _ in range(n_vec)]
+    scalars = [jnp.asarray(dtype(rng.normal())) for _ in range(n_sc)]
+    out_k = getattr(_fk, name)(*vecs, *scalars)
+    out_r = getattr(_fref, name + "_ref")(*vecs, *scalars)
+    assert len(out_k) == len(out_r)
+    for a, b in zip(out_k, out_r):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   **_tol(dtype))
+
+
+@settings(max_examples=20, deadline=None)
+@given(name=st.sampled_from(sorted(_FUSED_SIGS)),
+       n=st.integers(3, 3000),
+       dtype=st.sampled_from([np.float32, np.float64]),
+       seed=st.integers(0, 99))
+def test_fused_step_kernel_sweep(name, n, dtype, seed):
+    """Every fused kernel matches its ref oracle across sizes (ragged last
+    blocks included — n is rarely a multiple of the 1024 tile) and dtypes."""
+    _fused_parity_case(name, n, dtype, seed)
+
+
+@pytest.mark.parametrize("name", sorted(_FUSED_SIGS))
+def test_fused_step_kernel_edges(name):
+    """Deterministic coverage of every kernel at the tile edges the sweep
+    may miss: exact one-tile n, the 8×128 sub-tile boundary, and ragged."""
+    for n in (5, 128, 1024, 1029):
+        for dtype in (np.float32, np.float64):
+            _fused_parity_case(name, n, dtype, seed=0)
+
+
+def test_fused_dots_exclude_padding():
+    """The in-kernel reductions must not pick up the zero-padded tail — the
+    padding contributes exact zeros, so dots over a size-5 vector padded to
+    1024 equal the length-5 dots."""
+    u = jnp.asarray([1.0, 2.0, 3.0, 4.0, 5.0])
+    v = jnp.asarray([1.0, -1.0, 1.0, -1.0, 1.0])
+    uv, uu = _fk.fused_dots2(u, v)
+    np.testing.assert_allclose(float(uv), float(jnp.dot(u, v)), rtol=1e-14)
+    np.testing.assert_allclose(float(uu), float(jnp.dot(u, u)), rtol=1e-14)
+
+
+def test_fused_cg_solver_matches_plain():
+    """cg_fused (merged Chronopoulos–Gear recurrence) produces the same
+    iterates as the textbook loop — identical solution AND iteration count."""
+    from repro.core import solvers
+    from repro.data.poisson import poisson2d
+    A = poisson2d(20)
+    b = jnp.asarray(np.random.default_rng(5).normal(size=A.shape[0]))
+    mv = lambda x: A @ x
+    dinv = 1.0 / A.diagonal()
+    M = lambda r: dinv * r
+    x_p, i_p = solvers.cg(mv, b, M=M, tol=1e-11)
+    x_f, i_f = solvers.cg_fused(mv, b, dinv=dinv, tol=1e-11)
+    assert bool(i_f.converged)
+    assert int(i_f.iters) == int(i_p.iters)
+    np.testing.assert_allclose(np.asarray(x_f), np.asarray(x_p),
+                               rtol=1e-9, atol=1e-11)
+    # M-callable branch (no diagonal): fused axpy passes, plain recurrence
+    x_m, i_m = solvers.cg_fused(mv, b, M=M, tol=1e-11)
+    assert bool(i_m.converged)
+    np.testing.assert_allclose(np.asarray(x_m), np.asarray(x_p),
+                               rtol=1e-9, atol=1e-11)
+
+
+def test_fused_bicgstab_solver_matches_plain():
+    from repro.core import solvers
+    from repro.data.poisson import poisson1d
+    from repro.core.sparse import SparseTensor
+    n = 80
+    A1 = poisson1d(n)
+    val = np.asarray(A1.val).copy()
+    val[np.asarray(A1.col) == np.asarray(A1.row) - 1] = -1.4
+    val[np.asarray(A1.col) == np.asarray(A1.row) + 1] = -0.6
+    B = SparseTensor(val, A1.row, A1.col, (n, n))
+    b = jnp.asarray(np.random.default_rng(6).normal(size=n))
+    mv = lambda x: B @ x
+    dinv = 1.0 / B.diagonal()
+    x_p, i_p = solvers.bicgstab(mv, b, M=lambda r: dinv * r, tol=1e-11)
+    x_f, i_f = solvers.bicgstab_fused(mv, b, dinv=dinv, tol=1e-11)
+    assert bool(i_f.converged)
+    np.testing.assert_allclose(np.asarray(x_f), np.asarray(x_p),
+                               rtol=1e-8, atol=1e-10)
+
+
+def test_default_interpret_matches_platform():
+    """Satellite: the interpret flag auto-detects the platform instead of
+    defaulting to emulation everywhere."""
+    expect = jax.default_backend() not in ("tpu", "gpu")
+    assert _fk.default_interpret() == expect
+    # and the kernel-plan artifact records the same resolution
+    from repro.core import dispatch
+    from repro.data.poisson import poisson2d
+    A = poisson2d(8)
+    plan = A.plan(backend="pallas", method="cg")
+    assert plan.artifacts["kernel"].interpret == expect

@@ -221,6 +221,162 @@ def test_symmetric_backward_reuses_iterative_setup(A):
 
 
 # ---------------------------------------------------------------------------
+# kernel plans: analyze-time BELL conversion, transpose sharing, fused step
+# ---------------------------------------------------------------------------
+
+def test_kernel_plan_one_bell_conversion_serves_everything(A):
+    """One analyze-time BELL conversion serves the forward solve, the
+    backward adjoint, and a with_values sweep (the tentpole's counter)."""
+    b = jnp.ones(A.shape[0])
+
+    def loss(val):
+        x = A.with_values(val).solve(b, backend="pallas", method="cg",
+                                     tol=1e-13)
+        return jnp.sum(x ** 2)
+
+    reset_plan_stats()
+    jax.grad(loss)(A.val)
+    A.with_values(A.val * 2.0).solve(b, backend="pallas", method="cg",
+                                     tol=1e-12)
+    A.with_values(A.val * 0.5).solve(b, backend="pallas", method="cg",
+                                     tol=1e-12)
+    assert PLAN_STATS["analyze"] == 1, PLAN_STATS
+    assert PLAN_STATS["kernel_plan"] == 1, PLAN_STATS   # symmetric: Aᵀ shares
+    assert PLAN_STATS["transpose_shared"] == 1, PLAN_STATS
+    kp = A.plan(backend="pallas", method="cg").artifacts["kernel"]
+    assert kp.choice == "bell"
+    assert kp.t_bell is kp.bell
+
+
+def test_kernel_plan_transpose_shares_layout_nonsymmetric():
+    """Non-symmetric pallas plan: A and Aᵀ BELL layouts are built in the SAME
+    analyze pass, and the adjoint plan is a shared-artifact sibling — zero
+    additional analyzes, gradients still exact."""
+    B = _convection_diffusion(40)
+    b = jnp.ones(40)
+
+    def loss(val):
+        x = B.with_values(val).solve(b, backend="pallas", method="bicgstab",
+                                     tol=1e-13, maxiter=4000)
+        return jnp.sum(x ** 2)
+
+    def loss_dense(val):
+        return jnp.sum(jnp.linalg.solve(B.with_values(val).todense(), b) ** 2)
+
+    reset_plan_stats()
+    g = jax.grad(loss)(B.val)
+    assert PLAN_STATS["analyze"] == 1, PLAN_STATS       # NOT 2: layout shared
+    assert PLAN_STATS["kernel_plan"] == 2, PLAN_STATS   # A + Aᵀ, one pass
+    assert PLAN_STATS["transpose_shared"] == 1, PLAN_STATS
+    jax.grad(loss)(B.val * 1.5)
+    assert PLAN_STATS["analyze"] == 1, PLAN_STATS
+    assert PLAN_STATS["kernel_plan"] == 2, PLAN_STATS
+    plan = B.plan(backend="pallas", method="bicgstab")
+    tp = plan.transpose()
+    assert tp.artifacts["kernel"].bell is plan.artifacts["kernel"].t_bell
+    gd = jax.grad(loss_dense)(B.val)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(gd),
+                               rtol=1e-6, atol=1e-8)
+
+
+def test_kernel_plan_auto_falls_back_on_interpret_platform(A):
+    """The jnp backend's "auto" kernel plan records a segment-sum fallback
+    (with its reason) on platforms where Pallas would only be emulated."""
+    if jax.default_backend() in ("tpu", "gpu"):
+        pytest.skip("compiled-Pallas platform: auto plan may adopt BELL")
+    reset_plan_stats()
+    plan = A.plan(backend="jnp", method="cg")
+    kp = plan.artifacts["kernel"]
+    assert kp.choice == "coo"
+    assert "interpret" in kp.reason
+    assert PLAN_STATS["kernel_plan"] == 0, PLAN_STATS   # no conversion ran
+
+
+def test_plan_cache_lru_eviction(A):
+    """Satellite: the per-tensor plan cache is a bounded LRU — overflowing
+    it evicts the oldest plan and counts it."""
+    A._plans = dispatch.PlanCache(cap=2)
+    reset_plan_stats()
+    A.plan(backend="jnp", method="cg")
+    A.plan(backend="jnp", method="bicgstab")
+    assert PLAN_STATS["evictions"] == 0, PLAN_STATS
+    A.plan(backend="jnp", method="gmres")              # evicts the cg plan
+    assert PLAN_STATS["evictions"] == 1, PLAN_STATS
+    assert PLAN_STATS["cache_miss"] == 3, PLAN_STATS
+    A.plan(backend="jnp", method="bicgstab")           # still resident
+    assert PLAN_STATS["cache_hit"] == 1, PLAN_STATS
+    A.plan(backend="jnp", method="cg")                 # re-analyzed
+    assert PLAN_STATS["cache_miss"] == 4, PLAN_STATS
+    assert PLAN_STATS["evictions"] == 2, PLAN_STATS
+
+
+def test_fused_step_solve_matches_plain_and_grad(A):
+    """FUSED_STEP='on' routes CG/BiCGStab through the fused Pallas step
+    kernels: same solution as the plain loops, gradients still match dense
+    autodiff (the adjoint solve runs fused too)."""
+    b = jnp.asarray(np.random.default_rng(7).normal(size=A.shape[0]))
+
+    def loss(val):
+        x = A.with_values(val).solve(b, backend="pallas", method="cg",
+                                     tol=1e-13)
+        return jnp.sum(x ** 2)
+
+    def loss_dense(val):
+        return jnp.sum(jnp.linalg.solve(A.with_values(val).todense(), b) ** 2)
+
+    x_plain = A.solve(b, backend="pallas", method="cg", tol=1e-12)
+    dispatch.FUSED_STEP = "on"
+    try:
+        x_fused = A.solve(b, backend="pallas", method="cg", tol=1e-12)
+        g = jax.grad(loss)(A.val)
+    finally:
+        dispatch.FUSED_STEP = "auto"
+    np.testing.assert_allclose(np.asarray(x_fused), np.asarray(x_plain),
+                               rtol=1e-9, atol=1e-11)
+    gd = jax.grad(loss_dense)(A.val)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(gd),
+                               rtol=1e-6, atol=1e-8)
+
+
+def test_fused_step_bicgstab_nonsymmetric_grad():
+    B = _convection_diffusion(40, c=0.4)
+    b = jnp.asarray(np.random.default_rng(8).normal(size=40))
+
+    def loss(val):
+        x = B.with_values(val).solve(b, backend="pallas", method="bicgstab",
+                                     tol=1e-13, maxiter=4000)
+        return jnp.sum(x ** 2)
+
+    def loss_dense(val):
+        return jnp.sum(jnp.linalg.solve(B.with_values(val).todense(), b) ** 2)
+
+    dispatch.FUSED_STEP = "on"
+    try:
+        g = jax.grad(loss)(B.val)
+    finally:
+        dispatch.FUSED_STEP = "auto"
+    gd = jax.grad(loss_dense)(B.val)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(gd),
+                               rtol=1e-6, atol=1e-8)
+
+
+def test_fused_chebyshev_precond_matches_plain(A):
+    """The fused Chebyshev inner step threads through the preconditioner
+    refresh without changing the polynomial."""
+    b = jnp.ones(A.shape[0])
+    x_plain = A.solve(b, backend="pallas", method="cg", tol=1e-12,
+                      precond="chebyshev")
+    dispatch.FUSED_STEP = "on"
+    try:
+        x_fused = A.solve(b, backend="pallas", method="cg", tol=1e-12,
+                          precond="chebyshev")
+    finally:
+        dispatch.FUSED_STEP = "auto"
+    np.testing.assert_allclose(np.asarray(x_fused), np.asarray(x_plain),
+                               rtol=1e-9, atol=1e-11)
+
+
+# ---------------------------------------------------------------------------
 # gradients: forward-vs-adjoint plan reuse must not change the math
 # ---------------------------------------------------------------------------
 
