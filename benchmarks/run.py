@@ -26,7 +26,7 @@ def main() -> None:
                     help="CI-sized subset of each suite (minutes, not tens)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: "
-                         "table3,table4,fig2,table5,fig3,spmv")
+                         "table3,table4,fig2,table5,fig3,spmv,serve")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows + failure count as JSON")
     args = ap.parse_args()
@@ -45,6 +45,10 @@ def main() -> None:
     if only is None or "spmv" in only:
         from . import spmv
         suites.append(("spmv", lambda: spmv.run(args.full, smoke=args.smoke)))
+    if only is None or "serve" in only:
+        from . import serve
+        suites.append(("serve", lambda: serve.run(args.full,
+                                                  smoke=args.smoke)))
     if only is None or "fig2" in only:
         from . import fig2_adjoint_vs_naive
         suites.append(("fig2", fig2_adjoint_vs_naive.run))

@@ -1,0 +1,52 @@
+"""Serving-driver benchmark: batched vmapped dispatch vs one-at-a-time loop.
+
+Runs :func:`repro.launch.solve_serve.serve` on the shared-pattern smoke
+workload and reports p50/p99 request latency, solves/sec for both drivers,
+the speedup, and batch-group occupancy.  The suite RAISES (→ nonzero exit →
+CI red) unless the batched driver achieves ≥ 2× solves/sec over the
+sequential loop with exactly one pattern analysis across the whole run —
+the PR-7 acceptance gate, recorded in ``BENCH_serve.json``.
+"""
+from repro.launch.solve_serve import serve
+
+from .common import csv_row
+
+SPEEDUP_GATE = 2.0
+
+
+def run(full: bool = False, smoke: bool = False):
+    n_requests, grid = (64, 20) if smoke else (256, 32)
+    if full:
+        n_requests, grid = 512, 48
+    rep = serve(n_requests=n_requests, grid=grid, n_patterns=1, max_batch=32)
+
+    rows = []
+    b, s = rep["batched"], rep["sequential"]
+    rows.append(csv_row(
+        f"serve/batched/req={n_requests}", 1e6 / b["solves_per_sec"],
+        f"solves_per_sec={b['solves_per_sec']:.1f};"
+        f"p50_ms={b['p50_ms']:.2f};p99_ms={b['p99_ms']:.2f};"
+        f"occupancy={rep['occupancy']:.3f}"))
+    rows.append(csv_row(
+        f"serve/sequential/req={n_requests}", 1e6 / s["solves_per_sec"],
+        f"solves_per_sec={s['solves_per_sec']:.1f};"
+        f"p50_ms={s['p50_ms']:.2f};p99_ms={s['p99_ms']:.2f}"))
+    rows.append(csv_row(
+        "serve/speedup", 0.0,
+        f"ratio={rep['speedup']:.2f};gate={SPEEDUP_GATE:.1f};"
+        f"analyze={rep['plan_stats']['analyze']};"
+        f"patterns={rep['n_patterns']};converged={rep['converged']}"))
+
+    analyze = rep["plan_stats"]["analyze"]
+    if analyze != rep["n_patterns"]:
+        raise AssertionError(
+            f"expected one analyze per pattern ({rep['n_patterns']}), "
+            f"got {analyze} — plan amortization regressed")
+    if rep["speedup"] < SPEEDUP_GATE:
+        raise AssertionError(
+            f"batched serving speedup {rep['speedup']:.2f}x below the "
+            f"{SPEEDUP_GATE:.1f}x gate (batched {b['solves_per_sec']:.1f} "
+            f"vs sequential {s['solves_per_sec']:.1f} solves/sec)")
+    if not rep["converged"]:
+        raise AssertionError("batched serving produced unconverged solves")
+    return rows

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import dispatch as _dispatch
+from repro.core import options as _options
 from repro.core.adjoint import sparse_solve_with_info
 from repro.core.dispatch import get_plan, make_config
 from repro.core.sparse import coo_matvec
@@ -55,13 +56,10 @@ def run(full: bool = False, smoke: bool = False):
                             f"fill={kp.bell[0].fill:.4f};err={err:.1e}"))
 
         for label, mode in (("cg_plain", "off"), ("cg_fused", "on")):
-            _dispatch.FUSED_STEP = mode
-            try:
+            with _options.options(fused_step=mode):
                 t, (x, info) = timeit(jax.jit(
                     lambda val, bb: sparse_solve_with_info(
                         cfg, A.with_values(val), bb)), A.val, b)
-            finally:
-                _dispatch.FUSED_STEP = "auto"
             rows.append(csv_row(
                 f"spmv/{label}/dof={n}", t * 1e6,
                 f"residual={float(info.resnorm):.1e};iters={int(info.iters)}"))

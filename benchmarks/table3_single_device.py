@@ -6,7 +6,7 @@ iterative CG scales with O(nnz) memory, and the crossover matches the
 auto-dispatch policy constants.  Columns: backend time, peak-memory estimate,
 final residual — mirroring the paper's layout.  The ``direct`` rows exercise
 the cuDSS-analogue sparse LDLᵀ path (cached symbolic factorization, packed
-level-scheduled numeric kernel) up to the ``DIRECT_BUDGET`` crossover.
+level-scheduled numeric kernel) up to the ``direct_budget`` crossover.
 
 ``analyze_*`` rows time the symbolic stage itself — the cost every
 ``symbolic_factor`` consumer (direct solves, ``precond="ilu"``, the AMG
@@ -23,7 +23,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.dispatch import DENSE_BUDGET, DIRECT_BUDGET, make_config, get_plan
+from repro.core.dispatch import make_config, get_plan
+from repro.core.options import current as _current_options
 from repro.core.adjoint import sparse_solve_with_info
 from repro.core.direct import symbolic_factor
 from repro.data.poisson import poisson2d, poisson2d_vc
@@ -45,6 +46,8 @@ def mem_estimate_bytes(n, nnz, dtype_bytes=8):
 
 def run(full: bool = False, smoke: bool = False):
     rows = []
+    opts = _current_options()
+    DENSE_BUDGET, DIRECT_BUDGET = opts.dense_budget, opts.direct_budget
     ladder = SMOKE_LADDER if smoke else (FULL_LADDER if full else LADDER)
     for ng in ladder:
         n = ng * ng

@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from . import dispatch as _dispatch
+from . import options as _options
 from . import solvers as _solvers
 from .dispatch import SolverConfig
 from .sparse import SparseTensor
@@ -281,7 +282,7 @@ def sparse_eigsh(A: SparseTensor, k: int = 6, *, method: str = "lobpcg",
 
 # ---------------------------------------------------------------------------
 # log-determinant (paper §3.3) — sparse via cached LDLᵀ/LU factors within
-# DIRECT_BUDGET, dense fallback beyond
+# the direct_budget option, dense fallback beyond
 # ---------------------------------------------------------------------------
 
 def _slogdet_direct_plan(A: SparseTensor):
@@ -293,7 +294,7 @@ def _slogdet_direct_plan(A: SparseTensor):
         return None
     if isinstance(A.row, jax.core.Tracer) or isinstance(A.col, jax.core.Tracer):
         return None
-    if n > _dispatch.DIRECT_BUDGET:
+    if n > _options.current().direct_budget:
         return None
     if not _dispatch.BACKENDS["direct"].applicable(A):
         return None
@@ -304,7 +305,8 @@ def _slogdet_direct_plan(A: SparseTensor):
 def sparse_slogdet(A: SparseTensor):
     """(sign, log|det|) of A with gradients on the sparsity pattern.
 
-    For concrete square patterns within ``DIRECT_BUDGET`` the forward runs
+    For concrete square patterns within the ``direct_budget`` option the
+    forward runs
     on the *cached* LDLᵀ/LU factors of the plan engine (the same numeric
     factorization a ``backend="direct"`` solve memoizes): with the symmetric
     fill-reducing permutation det(P A Pᵀ) = det(A) and unit-diagonal L, the

@@ -61,7 +61,7 @@ pattern: ``backend="direct"`` solves, ``precond="ilu"``, the AMG coarsest
 level (:mod:`repro.core.multigrid`), the ``schwarz``/``schwarz2`` subdomain
 and coarse factors (:mod:`repro.core.distributed`), and ``slogdet``.  The
 auto-dispatch policy prefers the direct backend up to
-``repro.core.dispatch.DIRECT_BUDGET`` (raised to 24576 by the AMD + etree
+the ``direct_budget`` option (:mod:`repro.core.options`; raised to 24576 by the AMD + etree
 pipeline; ~7–8 s one-time analyze at that ceiling, amortized across the
 plan's lifetime) and 4× that under ``props["illcond_hint"]``.
 """

@@ -60,6 +60,8 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import sys
+import types
 import weakref
 from functools import partial
 from typing import Any, Callable, Dict, Optional, Tuple
@@ -69,21 +71,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import direct as _direct
+from . import options as _options
 from . import precond as _precond
 from . import solvers as _solvers
 from .sparse import SparseTensor, build_bell, coo_matvec, has_full_diagonal
 
-DENSE_BUDGET = 4096          # TPU dense-direct crossover (measured, see EXPERIMENTS.md)
-DIRECT_BUDGET = 24576        # sparse-direct crossover on the silent auto path.
-                             # Raised 3× from 8192 when the quotient-graph AMD
-                             # ordering + etree symbolic pass replaced the
-                             # exact-MD Python elimination (~12× faster
-                             # analyze: 14.3 s -> 1.2 s at n = 10⁴, measured):
-                             # the one-time eager analysis near this ceiling is
-                             # now ~7-8 s (vs ~14 s at the OLD 8192 ceiling),
-                             # amortized across the plan's lifetime; explicit
-                             # backend="direct" and illcond_hint accept larger
-                             # systems
+# The dispatch knobs (dense/direct budgets, BELL fill floor, fused-step mode,
+# plan-cache bounds) live in repro.core.options now — one immutable record
+# behind sla.set_options() / sla.options(...) / REPRO_SLA_* env vars.  The
+# historical module globals (DENSE_BUDGET, DIRECT_BUDGET, BELL_MIN_FILL,
+# FUSED_STEP, PLAN_CACHE_CAP, PLAN_CACHE_BYTES) remain as deprecated
+# read/write aliases — see the module __getattr__ / class swap at the bottom.
 DEFAULT_MAXITER = 2000
 
 # observable analyze/setup/cache counters (reset with ``reset_plan_stats``)
@@ -104,37 +102,49 @@ PLAN_STATS: Dict[str, int] = {
 
 
 def reset_plan_stats() -> None:
+    """Zero every ``PLAN_STATS`` counter (tests and benchmarks call this
+    before a measured region)."""
     for k in PLAN_STATS:
         PLAN_STATS[k] = 0
 
 
-# minimum BELL fill (nnz over padded slot capacity) for the kernel plan to
-# adopt the block-ELL layout on its own; below it the padding work outweighs
-# the dense-tile win and the plan records a segment-sum fallback.  1/64 keeps
-# 2-D Poisson (fill ≈ 0.02 at bm=8, bn=128) on the kernel path.
-BELL_MIN_FILL = 1.0 / 64.0
-
-# fused CG/BiCGStab step kernels (kernels/solve_step.py): "auto" enables them
-# when the Pallas kernels compile (TPU/GPU) and keeps the plain XLA loops in
-# interpret mode (CPU), where an emulated kernel per iteration would be a
-# slowdown; "on"/"off" force either path (benchmarks and parity tests).
-# Read at solve-trace time, not frozen into the plan.
-FUSED_STEP = "auto"
-
-PLAN_CACHE_CAP = 32          # per-pattern plan cache bound (LRU)
-
-
 class PlanCache(collections.OrderedDict):
-    """Pattern-keyed plan cache with a small LRU bound.
+    """Pattern-keyed plan cache: LRU entry cap + optional byte budget.
 
-    Plans are cheap to hold but a long-running server sweeping configs on one
-    tensor would otherwise grow the dict without bound; evictions count in
-    ``PLAN_STATS["evictions"]``.  Shared by ``with_values`` views exactly like
-    the plain dict it replaces."""
+    Plans are cheap-ish to hold, but a long-running server sweeping configs
+    on one tensor would otherwise grow the dict without bound — and plans
+    are NOT all the same size: BELL slot tables and direct/ILU/AMG factor
+    programs scale with the pattern, so the cache additionally tracks each
+    plan's :meth:`SolverPlan.nbytes` estimate and evicts LRU-first until the
+    resident total fits ``plan_cache_bytes`` (``None`` = entry-count-only).
+    Both bounds are live reads of :mod:`repro.core.options` unless pinned by
+    the constructor; evictions count in ``PLAN_STATS["evictions"]``.  Shared
+    by ``with_values`` views exactly like the plain dict it replaces."""
 
-    def __init__(self, cap: Optional[int] = None):
+    def __init__(self, cap: Optional[int] = None,
+                 max_bytes: Optional[int] = None):
         super().__init__()
-        self.cap = PLAN_CACHE_CAP if cap is None else cap
+        self._cap = cap
+        self._max_bytes = max_bytes
+        self._sizes: Dict[Any, int] = {}
+        self.total_bytes = 0
+
+    @property
+    def cap(self) -> int:
+        return self._cap if self._cap is not None \
+            else _options.current().plan_cache_cap
+
+    @property
+    def max_bytes(self) -> Optional[int]:
+        return self._max_bytes if self._max_bytes is not None \
+            else _options.current().plan_cache_bytes
+
+    @staticmethod
+    def _nbytes_of(value) -> int:
+        try:
+            return int(value.nbytes())
+        except Exception:
+            return 0
 
     def get(self, key, default=None):
         if key in self:
@@ -142,13 +152,36 @@ class PlanCache(collections.OrderedDict):
             return super().get(key)
         return default
 
+    def _evict_oldest(self) -> None:
+        old, _ = self.popitem(last=False)
+        self.total_bytes -= self._sizes.pop(old, 0)
+        PLAN_STATS["evictions"] += 1
+
     def __setitem__(self, key, value):
-        if key not in self:
-            while len(self) >= self.cap:
-                self.popitem(last=False)
-                PLAN_STATS["evictions"] += 1
+        if key in self:            # replace = delete + fresh LRU insert
+            super().__delitem__(key)
+            self.total_bytes -= self._sizes.pop(key, 0)
+        nb = self._nbytes_of(value)
+        budget = self.max_bytes
+        # the `while self` guard keeps at least the incoming entry resident:
+        # a single plan larger than the whole budget still gets cached (and
+        # evicts everything else) rather than thrashing on every get_plan
+        while self and (len(self) >= self.cap or
+                        (budget is not None and
+                         self.total_bytes + nb > budget)):
+            self._evict_oldest()
         super().__setitem__(key, value)
-        self.move_to_end(key)
+        self._sizes[key] = nb
+        self.total_bytes += nb
+
+    def __delitem__(self, key):
+        super().__delitem__(key)
+        self.total_bytes -= self._sizes.pop(key, 0)
+
+    def clear(self):
+        super().clear()
+        self._sizes.clear()
+        self.total_bytes = 0
 
 
 @dataclasses.dataclass
@@ -197,9 +230,15 @@ def _build_kernel_plan(pattern, prefer: str) -> KernelPlan:
         bell = build_bell(pattern.row, pattern.col, pattern.shape)
         PLAN_STATS["kernel_plan"] += 1
     meta = bell[0]
-    if prefer != "bell" and meta.fill < BELL_MIN_FILL:
+    # minimum BELL fill (nnz over padded slot capacity) for the kernel plan
+    # to adopt the block-ELL layout on its own; below it the padding work
+    # outweighs the dense-tile win and the plan records a segment-sum
+    # fallback.  The default (1/64) keeps 2-D Poisson (fill ≈ 0.02 at bm=8,
+    # bn=128) on the kernel path.
+    min_fill = _options.current().bell_min_fill
+    if prefer != "bell" and meta.fill < min_fill:
         return KernelPlan(
-            "coo", f"bell fill {meta.fill:.4f} < {BELL_MIN_FILL:.4f}", interp)
+            "coo", f"bell fill {meta.fill:.4f} < {min_fill:.4f}", interp)
     n, m = pattern.shape
     if n == m and pattern.props.get("symmetric", False):
         t_bell = bell                       # Aᵀ shares A's layout outright
@@ -212,9 +251,15 @@ def _build_kernel_plan(pattern, prefer: str) -> KernelPlan:
 
 
 def _fuse_enabled(kp: Optional[KernelPlan]) -> bool:
-    if FUSED_STEP == "on":
+    """Fused CG/BiCGStab step kernels (kernels/solve_step.py): "auto"
+    enables them when the Pallas kernels compile (TPU/GPU) and keeps the
+    plain XLA loops in interpret mode (CPU), where an emulated kernel per
+    iteration would be a slowdown; "on"/"off" force either path.  Read at
+    solve-trace time, not frozen into the plan."""
+    mode = _options.current().fused_step
+    if mode == "on":
         return True
-    if FUSED_STEP == "off" or kp is None:
+    if mode == "off" or kp is None:
         return False
     return not kp.interpret
 
@@ -450,7 +495,7 @@ class IterativeBackend(Backend):
     (``PLAN_STATS['setup_reuse']``); new values still refresh.
     """
     kernel = "auto"             # kernel-plan preference (see _build_kernel_plan)
-    methods = ("cg", "bicgstab", "gmres")
+    methods = ("cg", "bicgstab", "gmres", "block_cg")
     cache_setup = True
 
     def analyze(self, cfg, pattern):
@@ -460,27 +505,54 @@ class IterativeBackend(Backend):
                 cfg.precond, pattern.row, pattern.col, pattern.shape,
                 stencil=pattern.stencil)}
 
-    def setup(self, plan, A):
+    def _matvec_from_val(self, plan, val) -> Callable:
         kp = plan.artifacts.get("kernel")
         if kp is not None:
-            mv = _plan_matvec(plan, kp, A.val)
-        else:                    # plan built without a kernel artifact
-            fn = _kernel_fn(A, self.kernel)
-            mv = lambda x: fn(A.val, x)
-        fuse = _fuse_enabled(kp)
+            return _plan_matvec(plan, kp, val)
+        # plan built without a kernel artifact: plan carries the same
+        # row/col/bell/stencil attributes _kernel_fn reads off a tensor
+        fn = _kernel_fn(plan, self.kernel)
+        return lambda x: fn(val, x)
+
+    def setup(self, plan, A):
+        """Values-dependent setup as an ARRAYS-ONLY pytree.
+
+        Returns ``(val, pstate, dinv)`` — the (possibly transpose-remapped)
+        values, the preconditioner's refresh_state pytree (block inverses,
+        spectrum bounds, MG/AMG hierarchy arrays, ILU factors), and the
+        diagonal-inverse vector for the fused step kernels (None when the
+        apply is not a diagonal scale).  No closures: a stacked batch of
+        shared-pattern instances runs ONE ``jax.vmap`` of this method
+        (:meth:`SolverPlan.setup_batch`) and the solve stage rebuilds the
+        matvec/apply closures per lane.  The fuse decision itself stays a
+        solve-time read of ``options.fused_step``."""
+        mv = self._matvec_from_val(plan, A.val)
         pre = plan.artifacts["precond"]
-        M = pre.refresh(A, mv, fused=fuse)
-        # diagonal-inverse vector for the fused step kernels (None when the
-        # apply is not a diagonal scale); cheap, so prepared unconditionally —
-        # the fuse decision itself stays a solve-time read of FUSED_STEP
+        pstate = pre.refresh_state(A, mv)
         dinv = pre.fused_diag(A)
-        return mv, M, dinv
+        return A.val, pstate, dinv
 
     def solve(self, plan, state, A, b, x0, cfg):
-        mv, M, dinv = state
+        val, pstate, dinv = state
+        # rebuild from the STATE's values, not A.val: transpose plans remap
+        # the forward values in setup (_StencilTransposeBackend) and batched
+        # solves feed per-lane state slices
+        mv = self._matvec_from_val(plan, val)
         kp = plan.artifacts.get("kernel")
         fuse = _fuse_enabled(kp)
         interp = kp.interpret if kp is not None else None
+        M = plan.artifacts["precond"].make_apply(pstate, mv, fused=fuse,
+                                                 interpret=interp)
+        if cfg.method == "block_cg":
+            single = b.ndim == 1
+            B = b[None] if single else b
+            X0 = None if x0 is None else (x0[None] if single else x0)
+            X, info = _solvers.block_cg(mv, B, X0, M=M, tol=cfg.tol,
+                                        atol=cfg.atol, maxiter=cfg.maxiter)
+            if single:
+                return X[0], _solvers.SolveInfo(info.iters, info.resnorm[0],
+                                                info.converged[0])
+            return X, info
         if cfg.method == "cg":
             if fuse:
                 return _solvers.cg_fused(mv, b, x0, dinv=dinv, M=M,
@@ -719,13 +791,15 @@ def select_backend(A: SparseTensor, backend: str, method: str):
     carries that layout; CG when SPD-ish, BiCGStab otherwise."""
     n = A.shape[0]
     platform = jax.default_backend()
+    opts = _options.current()
     if backend == "auto":
         if A.stencil is not None:
             backend = "stencil"
-        elif n <= DENSE_BUDGET and not A.batch_shape and \
+        elif n <= opts.dense_budget and not A.batch_shape and \
                 BACKENDS["dense"].applicable(A):
             backend = "dense"
-        elif A.props.get("illcond_hint", False) and n <= 4 * DIRECT_BUDGET \
+        elif A.props.get("illcond_hint", False) \
+                and n <= 4 * opts.direct_budget \
                 and BACKENDS["direct"].applicable(A):
             # the hint is an explicit opt-in, so it buys a wider direct
             # window — the caller accepts the one-time (minutes-scale at the
@@ -733,7 +807,7 @@ def select_backend(A: SparseTensor, backend: str, method: str):
             backend = "direct"
         elif A.bell is not None and platform == "tpu":
             backend = "pallas"
-        elif n <= DIRECT_BUDGET and BACKENDS["direct"].applicable(A):
+        elif n <= opts.direct_budget and BACKENDS["direct"].applicable(A):
             backend = "direct"
         else:
             backend = "jnp"
@@ -801,30 +875,15 @@ class SolverPlan:
             self.artifacts = self.backend.analyze(cfg, self)
 
     # -- stage ❷: values-dependent setup (traced-safe) ----------------------
-    def setup(self, A: SparseTensor):
-        """Run (or reuse) the backend's values-dependent setup.
+    def _memo_lookup(self, slot: str, key_array):
+        """Per-values-array memo hit: identity of the array is the key."""
+        hit = self._setup_memo.get(slot)
+        if hit is not None and hit[0]() is key_array:
+            PLAN_STATS["setup_reuse"] += 1
+            return hit[1]
+        return None
 
-        Backends with ``cache_setup`` (the direct backend's numeric
-        factorization, the iterative preconditioner refresh, the distributed
-        backend) memoize the state per values *array*: a tolerance sweep, a
-        continuation loop, and the adjoint backward all reuse ONE setup —
-        identity of ``A.val`` is the key, which holds across custom_vjp
-        forward/backward in both eager and jit traces.  The memo is
-        single-slot (latest values win), shared with the transpose plan
-        where that is sound (direct: Aᵀ solves never refactorize), and holds
-        the values array weakly: a dead array can never produce a hit, so a
-        stale entry is harmless.  The weak eviction only actually fires when
-        the state does not itself capture the values array (direct factors);
-        iterative states close over ``A.val`` through their matvec, pinning
-        the LATEST values array (or trace tracer) per plan until the next
-        setup replaces it — a bounded, single-slot residency."""
-        if self.backend.cache_setup:
-            hit = self._setup_memo.get("state")
-            if hit is not None and hit[0]() is A.val:
-                PLAN_STATS["setup_reuse"] += 1
-                return hit[1]
-        PLAN_STATS["setup"] += 1
-        state = self.backend.setup(self, A)
+    def _memo_store(self, slot: str, key_array, state) -> None:
         # memo-poisoning guard: when a CONCRETE values array is set up
         # inside a staging trace (a jitted solve closing over the matrix),
         # the state embeds tracers — possibly hidden inside matvec or
@@ -834,20 +893,70 @@ class SolverPlan:
         # come back traced?  (Eager jax.grad says no — its fwd runs ops on
         # concrete primals concretely, so that state stays cacheable.)
         staging = isinstance(jnp.zeros(()) + 0.0, jax.core.Tracer)
-        if self.backend.cache_setup and not (
-                staging and not isinstance(A.val, jax.core.Tracer)):
-            memo = self._setup_memo
-            box = {}
+        if staging and not isinstance(key_array, jax.core.Tracer):
+            return
+        memo = self._setup_memo
+        box = {}
 
-            def _drop(_, m=memo, b=box):
-                # evict ONLY our own entry: a dead values array must not pop
-                # a successor that already replaced it (the old entry's ref
-                # can die between the successor's fwd store and bwd lookup)
-                if m.get("state") is b.get("entry"):
-                    m.pop("state", None)
+        def _drop(_, m=memo, b=box, s=slot):
+            # evict ONLY our own entry: a dead values array must not pop
+            # a successor that already replaced it (the old entry's ref
+            # can die between the successor's fwd store and bwd lookup)
+            if m.get(s) is b.get("entry"):
+                m.pop(s, None)
 
-            box["entry"] = (weakref.ref(A.val, _drop), state)
-            memo["state"] = box["entry"]
+        box["entry"] = (weakref.ref(key_array, _drop), state)
+        memo[slot] = box["entry"]
+
+    def setup(self, A: SparseTensor):
+        """Run (or reuse) the backend's values-dependent setup.
+
+        Backends with ``cache_setup`` (the direct backend's numeric
+        factorization, the iterative preconditioner refresh, the distributed
+        backend) memoize the state per values *array*: a tolerance sweep, a
+        continuation loop, and the adjoint backward all reuse ONE setup —
+        identity of ``A.val`` is the key, which holds across custom_vjp
+        forward/backward in both eager and jit traces.  The memo is
+        single-slot per kind (latest values win), shared with the transpose
+        plan where that is sound (direct: Aᵀ solves never refactorize), and
+        holds the values array weakly: a dead array can never produce a hit,
+        so a stale entry is harmless.  The weak eviction only actually fires
+        when the state does not itself capture the values array; setup
+        states are array pytrees that keep the LATEST values array (or trace
+        tracer) alive per plan until the next setup replaces it — a bounded,
+        single-slot residency."""
+        if self.backend.cache_setup:
+            hit = self._memo_lookup("state", A.val)
+            if hit is not None:
+                return hit
+        PLAN_STATS["setup"] += 1
+        state = self.backend.setup(self, A)
+        if self.backend.cache_setup:
+            self._memo_store("state", A.val, state)
+        return state
+
+    def setup_batch(self, A: SparseTensor):
+        """Batched setup over stacked values — ONE vmapped trace, memoized.
+
+        ``A.val`` carries leading batch dims ``(..., nnz)`` sharing this
+        plan's pattern.  The per-values memo is batch-aware: it keys on the
+        STACKED array's identity (slot ``"batch_state"``), so a tolerance
+        sweep or the adjoint backward over the same batch reuses one setup,
+        and ``PLAN_STATS["setup"]`` counts one setup for the whole batch.
+        The backend's per-instance setup runs under ``jax.vmap`` directly —
+        numeric factorizations, block inverses, Galerkin products, and MG
+        hierarchies all batch through their array-only state pytrees."""
+        val = A.val
+        if self.backend.cache_setup:
+            hit = self._memo_lookup("batch_state", val)
+            if hit is not None:
+                return hit
+        PLAN_STATS["setup"] += 1
+        flat = val.reshape((-1, val.shape[-1]))
+        state = jax.vmap(
+            lambda v: self.backend.setup(self, self.matrix(v)))(flat)
+        if self.backend.cache_setup:
+            self._memo_store("batch_state", val, state)
         return state
 
     # -- stage ❸: solve ------------------------------------------------------
@@ -868,10 +977,17 @@ class SolverPlan:
         batch = jnp.broadcast_shapes(A.batch_shape, b.shape[:-1])
         if batch and not A.batch_shape:
             # multi-rhs on ONE matrix: a single setup (one factorization /
-            # preconditioner build) serves every right-hand side — only the
-            # solve stage is vmapped.
+            # preconditioner build) serves every right-hand side.
             state = self.setup(A)
             fb = b.reshape((-1, b.shape[-1]))
+            if cfg.method == "block_cg":
+                # the whole (k, n) block goes down in ONE coupled solve —
+                # k matvecs per iteration as one batched sweep, Krylov
+                # directions shared across right-hand sides
+                fx0 = None if x0 is None else jnp.broadcast_to(
+                    x0, batch + x0.shape[-1:]).reshape(fb.shape)
+                xs, infos = self.backend.solve(self, state, A, fb, fx0, cfg)
+                return xs.reshape(batch + (b.shape[-1],)), infos
 
             def one(rhs, xx0=None):
                 return self.backend.solve(self, state, A, rhs, xx0, cfg)
@@ -887,19 +1003,84 @@ class SolverPlan:
             bb = jnp.broadcast_to(b, batch + b.shape[-1:])
             fv = val.reshape((-1, val.shape[-1]))
             fb = bb.reshape((-1, bb.shape[-1]))
+            fx0 = None if x0 is None else jnp.broadcast_to(
+                x0, batch + x0.shape[-1:]).reshape(fb.shape)
+            if self.backend.cache_setup:
+                # batched values: ONE vmapped setup over the stack (memoized
+                # on the stacked array — see setup_batch), then a vmapped
+                # solve over per-lane state slices.  Setup never re-runs
+                # inside the solve vmap, so a batch costs one traced
+                # factorization/preconditioner build, not B of them.
+                Ab = A if A.val.ndim > 1 and A.val.shape[:-1] == batch \
+                    else self.matrix(fv)
+                states = self.setup_batch(Ab)
 
-            def one(v, rhs, xx0=None):
-                return self.solve_single(self.matrix(v), rhs, xx0, cfg=cfg)
+                def one(st, v, rhs, xx0=None):
+                    return self.backend.solve(self, st, self.matrix(v), rhs,
+                                              xx0, cfg)
 
-            if x0 is None:
-                xs, infos = jax.vmap(lambda v, rhs: one(v, rhs))(fv, fb)
+                if fx0 is None:
+                    xs, infos = jax.vmap(
+                        lambda st, v, rhs: one(st, v, rhs))(states, fv, fb)
+                else:
+                    xs, infos = jax.vmap(one)(states, fv, fb, fx0)
             else:
-                fx0 = jnp.broadcast_to(x0, batch + x0.shape[-1:]).reshape(fb.shape)
-                xs, infos = jax.vmap(one)(fv, fb, fx0)
+                def one_nostate(v, rhs, xx0=None):
+                    return self.solve_single(self.matrix(v), rhs, xx0,
+                                             cfg=cfg)
+
+                if fx0 is None:
+                    xs, infos = jax.vmap(
+                        lambda v, rhs: one_nostate(v, rhs))(fv, fb)
+                else:
+                    xs, infos = jax.vmap(one_nostate)(fv, fb, fx0)
             return xs.reshape(batch + (b.shape[-1],)), infos
         return self.solve_single(A, b, x0, cfg=cfg)
 
     # -- pattern helpers -----------------------------------------------------
+    def nbytes(self) -> int:
+        """Estimated resident bytes of this plan's analyze artifacts — BELL
+        slot tables, direct/ILU symbolic programs, AMG index programs, plus
+        the pattern arrays they reference.  This is the size the
+        :class:`PlanCache` byte budget (``options.plan_cache_bytes``) counts
+        against; an estimate (arrays shared between plans are counted in
+        each), not an allocator measurement."""
+        seen = set()
+        total = 0
+
+        def visit(obj):
+            nonlocal total
+            if obj is None or isinstance(obj, (int, float, bool, str, bytes,
+                                               complex)):
+                return
+            if id(obj) in seen:
+                return
+            seen.add(id(obj))
+            nb = getattr(obj, "nbytes", None)
+            if isinstance(nb, (int, np.integer)):
+                total += int(nb)
+                return
+            if isinstance(obj, dict):
+                for v in obj.values():
+                    visit(v)
+            elif isinstance(obj, (tuple, list)):
+                for v in obj:
+                    visit(v)
+            elif dataclasses.is_dataclass(obj):
+                for f in dataclasses.fields(obj):
+                    visit(getattr(obj, f.name))
+            elif hasattr(obj, "__dict__"):
+                for v in vars(obj).values():
+                    visit(v)
+
+        try:
+            visit(self.artifacts)
+            visit(self.bell)
+            visit((self.row, self.col))
+        except Exception:
+            pass
+        return total
+
     def matrix(self, val) -> SparseTensor:
         """SparseTensor view of this plan's pattern carrying ``val`` —
         shares the plan cache, so nested solves hit this plan."""
@@ -1007,3 +1188,45 @@ def solve_impl(cfg: SolverConfig, A: SparseTensor, b: jax.Array,
                x0: Optional[jax.Array] = None):
     """One un-differentiated solve through the cached plan."""
     return get_plan(A, cfg).solve(A, b, x0, cfg=cfg)
+
+
+# ---------------------------------------------------------------------------
+# deprecated knob aliases — the pre-options module globals
+# ---------------------------------------------------------------------------
+
+_DEPRECATED_GLOBALS = {
+    "FUSED_STEP": "fused_step",
+    "DENSE_BUDGET": "dense_budget",
+    "DIRECT_BUDGET": "direct_budget",
+    "BELL_MIN_FILL": "bell_min_fill",
+    "PLAN_CACHE_CAP": "plan_cache_cap",
+    "PLAN_CACHE_BYTES": "plan_cache_bytes",
+}
+
+
+def __getattr__(name: str):
+    """PEP 562 read alias: ``dispatch.FUSED_STEP`` etc. forward to the active
+    :class:`repro.core.options.Options`, warning once per name."""
+    field = _DEPRECATED_GLOBALS.get(name)
+    if field is not None:
+        _options.warn_deprecated_alias(name, field)
+        return getattr(_options.current(), field)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+class _DeprecatedGlobalsModule(types.ModuleType):
+    """Write alias: PEP 562 covers reads only, so assignment to the legacy
+    globals (``dispatch.FUSED_STEP = "on"``) is intercepted by swapping the
+    module's class — the write warns once and forwards to ``set_options``,
+    keeping old scripts working without reintroducing mutable globals."""
+
+    def __setattr__(self, name, value):
+        field = _DEPRECATED_GLOBALS.get(name)
+        if field is not None:
+            _options.warn_deprecated_alias(name, field)
+            _options.set_options(**{field: value})
+            return
+        super().__setattr__(name, value)
+
+
+sys.modules[__name__].__class__ = _DeprecatedGlobalsModule

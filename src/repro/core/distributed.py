@@ -516,13 +516,15 @@ class DSparseTensor:
         gradients'): pulls the global matrix onto ONE host, rebuilds a
         :class:`SparseTensor`, and delegates to its slogdet — which is the
         sparse cached-LDLᵀ path (Σ log |d_i| with sign tracking, O(nnz_L)
-        memory) for patterns within ``DIRECT_BUDGET`` and the dense O(n²)
+        memory) for patterns within the ``direct_budget`` option and the
+        dense O(n²)
         fallback beyond.  The full gather is runtime-warned either way, and
         the host round-trip breaks gradient flow into the stacked values."""
         import warnings
         warnings.warn("DSparseTensor.slogdet gathers the global matrix onto "
                       "one process — not distributed-scalable (sparse LDLT "
-                      "within DIRECT_BUDGET, dense O(n^2) beyond).")
+                      "within the direct_budget option, dense O(n^2) "
+                      "beyond).")
         val, row, col = self.gather_values()
         return SparseTensor(val, row, col, self.shape).slogdet()
 

@@ -198,6 +198,30 @@ class MultigridPreconditioner:
                         _smooth(v5, x, b, self.omega, it)))
         return tuple(out)
 
+    def state(self) -> tuple:
+        """Array-only pytree of the hierarchy: per-level stencil planes plus
+        the dense coarse operator.  Everything static (grid sizes, smoother
+        counts) is shape metadata or defaults, so a stacked batch of these
+        states vmaps cleanly; :meth:`from_state` rehydrates per lane."""
+        return (tuple(self.levels), self.A_coarse)
+
+    @classmethod
+    def from_state(cls, state: tuple, *, pre_smooth: int = 2,
+                   post_smooth: int = 2,
+                   omega: float = 0.8) -> "MultigridPreconditioner":
+        """Rebuild the apply from a :meth:`state` pytree — closure assembly
+        only, no array work (the coarse operator rides along in the state),
+        so it is safe inside a ``vmap`` lane of a batched solve."""
+        levels, A_coarse = state
+        mg = cls.__new__(cls)
+        mg.pre, mg.post, mg.omega = pre_smooth, post_smooth, omega
+        mg.levels = list(levels)
+        mg.sizes = [int(v5.shape[1]) for v5 in levels]
+        mg.A_coarse = A_coarse
+        mg.scale = 4.0
+        mg._hier = mg._build_hierarchy()
+        return mg
+
     def __call__(self, r: jax.Array) -> jax.Array:
         ng = self.sizes[0]
         return v_cycle(self._hier, r.reshape(ng, ng)).reshape(-1)

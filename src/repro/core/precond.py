@@ -227,41 +227,84 @@ class PreconditionerPlan:
             return jnp.where(jnp.abs(d) > 1e-30, 1.0 / d, 1.0)
         return None
 
-    def refresh(self, A, matvec: Callable, fused: bool = False) -> Callable:
-        """values-dependent stage — traced-safe; one call per solver setup.
-        ``fused`` routes multi-pass applies (Chebyshev) through the fused
-        step kernels where they have one."""
+    def refresh_state(self, A, matvec: Callable) -> tuple:
+        """values-dependent stage, ARRAYS ONLY — traced-safe AND vmappable.
+
+        Returns a pytree of arrays (no closures), so a whole stacked batch of
+        shared-pattern matrices can run ``jax.vmap(refresh_state)`` through
+        one trace — the engine half of the serving tentpole.  The apply
+        closure is assembled from this state at solve time by
+        :meth:`make_apply` (cheap, no array work)."""
         if self.name == "none":
-            return identity()
+            return ()
         if self.name == "jacobi":
-            return jacobi(A.diagonal())
+            d = A.diagonal()
+            return (jnp.where(jnp.abs(d) > 1e-30, 1.0 / d, 1.0),)
         if self.name == "block_jacobi":
-            n, block = self.shape[0], self.block
+            block = self.block
             if self._bj_idx is None:      # traced pattern: derive per refresh
-                return block_jacobi(A.val, A.row, A.col, n, block)
-            safe, same = self._bj_idx
+                safe, same = _bj_indices(A.row, A.col, block)
+            else:
+                safe, same = self._bj_idx
             inv = jnp.linalg.inv(_bj_assemble(A.val, safe, same, self.nb, block))
-            return _bj_apply(inv, n, self.nb, block)
+            return (inv,)
         if self.name == "chebyshev":
             lmin, lmax = estimate_spectrum(matvec, self.shape[0], A.dtype)
             lmin = jnp.maximum(lmin, lmax * 1e-4)
-            return chebyshev(matvec, lmin, lmax, degree=self.degree,
-                             fused=fused)
+            return (lmin, lmax)
         if self.name == "mg":
             from .multigrid import MultigridPreconditioner
             nx, ny = self.stencil.nx, self.stencil.ny
             v5 = A.val.reshape(5, nx, ny)
-            return MultigridPreconditioner.from_planes(v5)
+            return MultigridPreconditioner.from_planes(v5).state()
+        if self.name == "ilu":
+            from . import direct as _direct
+            return (_direct.numeric_factor(self._ilu, A.val),)
+        if self.name == "amg":
+            from . import multigrid as _mg
+            return _mg.amg_numeric(self._amg, A.val)  # traced-safe Galerkin
+        raise ValueError(f"unknown preconditioner {self.name!r}")
+
+    def make_apply(self, state, matvec: Callable, fused: bool = False,
+                   interpret: Optional[bool] = None) -> Callable:
+        """Apply closure over a :meth:`refresh_state` pytree (solve stage).
+
+        Pure closure assembly — no array computation happens here, so it can
+        run inside a per-instance ``vmap`` lane of a batched solve.  ``fused``
+        routes multi-pass applies (Chebyshev) through the fused step kernels
+        where they have one; it is a solve-time decision, never baked into
+        the state."""
+        if self.name == "none":
+            return identity()
+        if self.name == "jacobi":
+            (inv,) = state
+            return lambda r: inv * r
+        if self.name == "block_jacobi":
+            (inv,) = state
+            return _bj_apply(inv, self.shape[0], self.nb, self.block)
+        if self.name == "chebyshev":
+            lmin, lmax = state
+            return chebyshev(matvec, lmin, lmax, degree=self.degree,
+                             fused=fused, interpret=interpret)
+        if self.name == "mg":
+            from .multigrid import MultigridPreconditioner
+            return MultigridPreconditioner.from_state(state)
         if self.name == "ilu":
             from . import direct as _direct
             art = self._ilu
-            C = _direct.numeric_factor(art, A.val)   # traced-safe refactorize
+            (C,) = state
             return lambda r: _direct.factored_solve(art, C, r)
         if self.name == "amg":
             from . import multigrid as _mg
-            state = _mg.amg_numeric(self._amg, A.val)  # traced-safe Galerkin
             return _mg.AMGPreconditioner(self._amg, state)
         raise ValueError(f"unknown preconditioner {self.name!r}")
+
+    def refresh(self, A, matvec: Callable, fused: bool = False) -> Callable:
+        """values-dependent stage — traced-safe; one call per solver setup.
+        Composition of :meth:`refresh_state` + :meth:`make_apply`, kept for
+        callers that want the one-shot closure."""
+        return self.make_apply(self.refresh_state(A, matvec), matvec,
+                               fused=fused)
 
 
 class DistPreconditionerPlan:

@@ -20,8 +20,8 @@ import jax.numpy as jnp
 from jax import lax
 
 __all__ = [
-    "SolveInfo", "cg", "cg_fused", "bicgstab", "bicgstab_fused",
-    "gmres", "cg_scan",
+    "SolveInfo", "SolveResult", "cg", "cg_fused", "bicgstab",
+    "bicgstab_fused", "block_cg", "gmres", "cg_scan",
     "dense_solve", "newton_solve", "picard_solve", "anderson_solve",
     "lobpcg", "lanczos",
 ]
@@ -31,6 +31,37 @@ class SolveInfo(NamedTuple):
     iters: jax.Array       # iterations executed
     resnorm: jax.Array     # final ‖r‖₂
     converged: jax.Array   # bool
+
+
+class SolveResult(NamedTuple):
+    """Typed solve payload, uniform across iterative/direct/distributed
+    backends — what :func:`repro.sla.solve_with_info` returns, and what the
+    serving driver reports per request.
+
+    ``iterations``/``residual``/``converged`` mirror :class:`SolveInfo`
+    (per-rhs vectors for multi-rhs/batched solves, scalars otherwise);
+    ``reason`` is a static string: ``"converged"``, ``"maxiter"``, or
+    ``"unknown"`` when the result is still a tracer (inside jit) and the
+    outcome is not concretely decidable.
+    """
+    x: jax.Array
+    iterations: jax.Array
+    residual: jax.Array
+    converged: jax.Array
+    reason: str
+
+
+def as_solve_result(x, info: SolveInfo,
+                    reason: Optional[str] = None) -> SolveResult:
+    """Wrap a backend's ``(x, SolveInfo)`` pair into a :class:`SolveResult`."""
+    if reason is None:
+        try:
+            reason = "converged" if bool(jnp.all(info.converged)) \
+                else "maxiter"
+        except Exception:      # traced under jit/vmap: not concretely known
+            reason = "unknown"
+    return SolveResult(x=x, iterations=info.iters, residual=info.resnorm,
+                       converged=info.converged, reason=reason)
 
 
 def _identity(x):
@@ -276,6 +307,76 @@ def bicgstab_fused(matvec: Callable, b: jax.Array,
     x, r, *_, rr, k, _ = lax.while_loop(cond, body, st0)
     rn = jnp.sqrt(rr)
     return x, SolveInfo(k, rn, rn <= target)
+
+
+def block_cg(matvec: Callable, B: jax.Array,
+             X0: Optional[jax.Array] = None, *, M: Callable = _identity,
+             tol: float = 1e-6, atol: float = 0.0, maxiter: int = 1000,
+             ridge: float = 1e-12):
+    """Block conjugate gradient (O'Leary 1980) for multiple right-hand sides.
+
+    ``B`` is ``(k, n)`` — k right-hand sides sharing ONE SPD matrix.  The k
+    Krylov directions are coupled through (k, k) Gram solves each iteration,
+    so hard right-hand sides borrow search directions from easy ones
+    (iteration count tracks the HARDEST rhs, not the sum), and every
+    iteration runs its k matvecs as one ``vmap`` sweep — the same
+    multi-rhs amortization the serving driver's batched dispatch exploits.
+    ``matvec``/``M`` are single-vector closures, vmapped here, so every
+    kernel-plan matvec and every preconditioner apply works unchanged.
+
+    Convergence targets are per-rhs (``max(tol·‖bᵢ‖, atol)``); the loop runs
+    until EVERY rhs meets its target or ``maxiter``.  Converged or linearly
+    dependent directions make the Gram matrices singular — those are solved
+    through a symmetric eigendecomposition pseudo-inverse with a relative
+    cutoff (``ridge`` above dtype eps), so a finished/duplicate column
+    becomes an inert no-op instead of amplified roundoff or NaNs
+    (breakdown-free in the O'Leary rank-deficient sense).
+
+    Returns ``(X, SolveInfo)`` with per-rhs ``resnorm``/``converged``
+    vectors of length k and a scalar shared iteration count.
+    """
+    if B.ndim != 2:
+        raise ValueError(f"block_cg expects B of shape (k, n), got {B.shape}")
+    k = B.shape[0]
+    X0 = jnp.zeros_like(B) if X0 is None else X0
+    mv = jax.vmap(matvec)
+    Mv = jax.vmap(M)
+    target = jnp.maximum(tol * jnp.linalg.norm(B, axis=1), atol)
+    # both Gram matrices (PᵀAP and ZᵀR) are symmetric for SPD A and
+    # symmetric M, up to roundoff — symmetrize and pseudo-invert
+    cutoff = jnp.maximum(jnp.asarray(ridge, B.dtype),
+                         k * 10 * jnp.finfo(B.dtype).eps)
+
+    def gram_solve(G, rhs):
+        w, V = jnp.linalg.eigh(0.5 * (G + G.T))
+        cut = jnp.max(jnp.abs(w)) * cutoff
+        winv = jnp.where(jnp.abs(w) > cut, 1.0 / w, 0.0)
+        return V @ (winv[:, None] * (V.T @ rhs))
+
+    R0 = B - mv(X0)
+    Z0 = Mv(R0)
+    rho0 = Z0 @ R0.T
+
+    def cond(st):
+        X, R, P, rho, it = st
+        return (it < maxiter) & jnp.any(jnp.linalg.norm(R, axis=1) > target)
+
+    def body(st):
+        X, R, P, rho, it = st
+        Q = mv(P)
+        alpha = gram_solve(P @ Q.T, rho)       # (PᵀAP)⁻¹ ZᵀR, row convention
+        X = X + alpha.T @ P
+        R = R - alpha.T @ Q
+        Z = Mv(R)
+        rho_new = Z @ R.T
+        beta = gram_solve(rho, rho_new)
+        P = Z + beta.T @ P
+        return (X, R, P, rho_new, it + 1)
+
+    X, R, P, rho, it = lax.while_loop(
+        cond, body, (X0, R0, Z0, rho0, jnp.array(0)))
+    rn = jnp.linalg.norm(R, axis=1)
+    return X, SolveInfo(it, rn, rn <= target)
 
 
 def gmres(matvec: Callable, b: jax.Array, x0: Optional[jax.Array] = None, *,

@@ -475,7 +475,8 @@ class SparseTensor:
     def slogdet(self):
         """(sign, log|det|): sparse via the plan engine's cached LDLᵀ/LU
         factors (Σ log |d_i| with sign tracking) for concrete patterns
-        within ``DIRECT_BUDGET``; dense fallback beyond (paper §3.3)."""
+        within the ``direct_budget`` option; dense fallback beyond
+        (paper §3.3)."""
         from . import adjoint
         return adjoint.sparse_slogdet(self)
 

@@ -1,0 +1,123 @@
+"""repro.sla — the stable public surface of the sparse linear algebra engine.
+
+This is the supported way in: a curated namespace over the plan-cached solver
+engine (:mod:`repro.core`) and the request-batching serving driver
+(:mod:`repro.launch.solve_serve`).  Internal modules remain importable but
+undocumented and unstable; everything listed in ``__all__`` here is covered
+by the API-surface snapshot test and the generated reference
+(``docs/api.md``, built by ``tools/gen_api_ref.py``).
+
+Quick start::
+
+    import jax.numpy as jnp
+    from repro import sla
+
+    A = sla.SparseTensor(val, row, col, (n, n))   # COO, differentiable vals
+    x = sla.solve(A, b)                           # auto-dispatch + adjoint
+    res = sla.solve_with_info(A, b, tol=1e-10)    # typed SolveResult
+    print(res.iterations, res.residual, res.reason)
+
+Options (the former ``repro.core.dispatch`` module globals)::
+
+    sla.set_options(fused_step="on")              # process-wide
+    with sla.options(direct_budget=10**5):        # scoped, exception-safe
+        x = sla.solve(A, b)
+    sla.get_options().plan_cache_bytes            # the active record
+
+Every option also has a ``REPRO_SLA_*`` environment override read at import
+(e.g. ``REPRO_SLA_FUSED_STEP=off``, ``REPRO_SLA_PLAN_CACHE_BYTES=1e8``).
+
+Serving::
+
+    from repro.sla import SolveServer
+    server = SolveServer()
+    results = server.submit_batch(requests)       # grouped + vmapped dispatch
+
+The engine's contract, in one line: ``analyze`` (pattern → plan) is eager
+and cached, ``setup`` (values → state) is traced-safe and memoized per
+values array, ``solve`` (rhs → x) is where gradients attach — see
+CONTRIBUTING.md for why that split is load-bearing.
+"""
+from __future__ import annotations
+
+from .core.dispatch import (PLAN_STATS, SolverConfig, SolverPlan, get_plan,
+                            make_config, register_backend, reset_plan_stats)
+from .core.options import Options
+from .core.options import current as get_options
+from .core.options import options, set_options
+from .core.solvers import SolveInfo, SolveResult, as_solve_result
+from .core.sparse import SparseTensor
+
+__all__ = [
+    "SparseTensor",
+    "DSparseTensor",
+    "SolverConfig",
+    "SolverPlan",
+    "SolveResult",
+    "Options",
+    "solve",
+    "solve_with_info",
+    "get_plan",
+    "register_backend",
+    "set_options",
+    "options",
+    "get_options",
+    "serve",
+    "SolveServer",
+    "PLAN_STATS",
+    "reset_plan_stats",
+]
+
+# lazily bound: the distributed layer pulls in mesh/shard_map machinery and
+# the serving driver pulls in the launch package — single-device library use
+# should not pay either import
+_LAZY = {
+    "DSparseTensor": ("repro.core.distributed", "DSparseTensor"),
+    "serve": ("repro.launch.solve_serve", "serve"),
+    "SolveServer": ("repro.launch.solve_serve", "SolveServer"),
+}
+
+
+def __getattr__(name: str):
+    target = _LAZY.get(name)
+    if target is not None:
+        from importlib import import_module
+        return getattr(import_module(target[0]), target[1])
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))
+
+
+def solve(A, b, **kw):
+    """Solve ``A @ x = b`` with adjoint gradients (paper §3.2).
+
+    ``A`` is a :class:`SparseTensor` (or :class:`DSparseTensor`); ``b`` may
+    carry leading batch dimensions, and ``A`` may carry stacked values
+    sharing one pattern — both batch through ONE analyzed plan and one
+    vmapped setup.  Keyword options: ``backend`` ("auto", "dense", "direct",
+    "jnp", "pallas", "stencil"), ``method`` (backend-specific; "block_cg"
+    solves a multi-rhs batch as one coupled block), ``precond``, ``tol``,
+    ``atol``, ``maxiter``, ``x0``.  Returns ``x`` only; gradients flow
+    through the O(1)-graph adjoint solve.  Use :func:`solve_with_info` for
+    convergence diagnostics."""
+    return A.solve(b, **kw)
+
+
+def solve_with_info(A, b, *, x0=None, **kw) -> SolveResult:
+    """Like :func:`solve`, returning a typed :class:`SolveResult`.
+
+    Works uniformly across the iterative, direct, and distributed backends:
+    ``x`` (solution), ``iterations``, ``residual`` (final ‖r‖₂, per-rhs for
+    batches), ``converged``, and a static ``reason`` string ("converged",
+    "maxiter", or "unknown" under a trace).  This entry point is
+    un-differentiated — it is the serving/diagnostics path; use
+    :func:`solve` when gradients matter."""
+    if getattr(A, "mesh", None) is not None:      # distributed tensor
+        x, info = A.solve_with_info(b, x0=x0, **kw)
+    else:
+        from .core.dispatch import make_config, solve_impl
+        cfg = make_config(A, **kw)
+        x, info = solve_impl(cfg, A, b, x0)
+    return as_solve_result(x, info)

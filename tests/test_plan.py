@@ -14,6 +14,7 @@ import pytest
 from repro.core import (SparseTensor, PLAN_STATS, get_plan, make_config,
                         reset_plan_stats)
 from repro.core import dispatch
+from repro.core import options as sla_options
 from repro.data.poisson import poisson1d, poisson2d, poisson2d_vc
 
 
@@ -311,7 +312,7 @@ def test_plan_cache_lru_eviction(A):
 
 
 def test_fused_step_solve_matches_plain_and_grad(A):
-    """FUSED_STEP='on' routes CG/BiCGStab through the fused Pallas step
+    """fused_step='on' routes CG/BiCGStab through the fused Pallas step
     kernels: same solution as the plain loops, gradients still match dense
     autodiff (the adjoint solve runs fused too)."""
     b = jnp.asarray(np.random.default_rng(7).normal(size=A.shape[0]))
@@ -325,12 +326,9 @@ def test_fused_step_solve_matches_plain_and_grad(A):
         return jnp.sum(jnp.linalg.solve(A.with_values(val).todense(), b) ** 2)
 
     x_plain = A.solve(b, backend="pallas", method="cg", tol=1e-12)
-    dispatch.FUSED_STEP = "on"
-    try:
+    with sla_options.options(fused_step="on"):
         x_fused = A.solve(b, backend="pallas", method="cg", tol=1e-12)
         g = jax.grad(loss)(A.val)
-    finally:
-        dispatch.FUSED_STEP = "auto"
     np.testing.assert_allclose(np.asarray(x_fused), np.asarray(x_plain),
                                rtol=1e-9, atol=1e-11)
     gd = jax.grad(loss_dense)(A.val)
@@ -350,11 +348,8 @@ def test_fused_step_bicgstab_nonsymmetric_grad():
     def loss_dense(val):
         return jnp.sum(jnp.linalg.solve(B.with_values(val).todense(), b) ** 2)
 
-    dispatch.FUSED_STEP = "on"
-    try:
+    with sla_options.options(fused_step="on"):
         g = jax.grad(loss)(B.val)
-    finally:
-        dispatch.FUSED_STEP = "auto"
     gd = jax.grad(loss_dense)(B.val)
     np.testing.assert_allclose(np.asarray(g), np.asarray(gd),
                                rtol=1e-6, atol=1e-8)
@@ -366,12 +361,9 @@ def test_fused_chebyshev_precond_matches_plain(A):
     b = jnp.ones(A.shape[0])
     x_plain = A.solve(b, backend="pallas", method="cg", tol=1e-12,
                       precond="chebyshev")
-    dispatch.FUSED_STEP = "on"
-    try:
+    with sla_options.options(fused_step="on"):
         x_fused = A.solve(b, backend="pallas", method="cg", tol=1e-12,
                           precond="chebyshev")
-    finally:
-        dispatch.FUSED_STEP = "auto"
     np.testing.assert_allclose(np.asarray(x_fused), np.asarray(x_plain),
                                rtol=1e-9, atol=1e-11)
 

@@ -1,0 +1,283 @@
+"""Serving tentpole: vmap-clean batched setup/solve + the request-batching
+driver.
+
+Parity is against a plain Python loop over the batch; plan counters prove
+one analyze serves the whole batch and setup runs ONCE (vmapped) rather
+than per element.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import PLAN_STATS, get_plan, make_config, reset_plan_stats
+from repro.core import dispatch
+from repro.core import options as sla_options
+from repro.data.poisson import poisson2d, poisson2d_vc
+
+
+def _batch(A, scales):
+    return A.with_values(jnp.stack([A.val * s for s in scales]))
+
+
+def _loop_reference(A, scales, b, **kw):
+    ref = np.stack([np.asarray(A.with_values(A.val * s).solve(b, **kw))
+                    for s in scales])
+    A._plans.clear()     # the reference warmed the shared plan cache —
+    reset_plan_stats()   # drop it so the batched solve is counted fresh
+    return ref
+
+
+SCALES = (1.0, 1.7, 0.6)
+
+
+# ---------------------------------------------------------------------------
+# vmap-clean batched setup/solve, per backend
+# ---------------------------------------------------------------------------
+
+def test_batched_values_iterative_parity_and_counters():
+    A = poisson2d(8)
+    b = jnp.ones(A.shape[0])
+    kw = dict(backend="jnp", method="cg", tol=1e-11)
+    ref = _loop_reference(A, SCALES, b, **kw)
+    Ab = _batch(A, SCALES)
+    reset_plan_stats()
+    xs = Ab.solve(b, **kw)
+    assert PLAN_STATS["analyze"] == 1, PLAN_STATS
+    assert PLAN_STATS["setup"] == 1, PLAN_STATS   # ONE vmapped setup
+    np.testing.assert_allclose(np.asarray(xs), ref, rtol=1e-8, atol=1e-10)
+
+
+def test_batched_values_direct_parity_single_factorize_trace():
+    A = poisson2d(8)
+    b = jnp.ones(A.shape[0])
+    kw = dict(backend="direct", method="ldlt")
+    ref = _loop_reference(A, SCALES, b, **kw)
+    Ab = _batch(A, SCALES)
+    reset_plan_stats()
+    xs = Ab.solve(b, **kw)
+    assert PLAN_STATS["analyze"] == 1, PLAN_STATS
+    assert PLAN_STATS["setup"] == 1, PLAN_STATS
+    # the numeric factorization is traced ONCE for the whole stack (vmap),
+    # not once per element
+    assert PLAN_STATS["factorize"] == 1, PLAN_STATS
+    np.testing.assert_allclose(np.asarray(xs), ref, rtol=1e-9, atol=1e-11)
+
+
+def test_batched_values_amg_parity_single_galerkin_trace():
+    A = poisson2d(10)
+    b = jnp.ones(A.shape[0])
+    kw = dict(backend="jnp", method="cg", precond="amg", tol=1e-11)
+    ref = _loop_reference(A, SCALES, b, **kw)
+    Ab = _batch(A, SCALES)
+    reset_plan_stats()
+    xs = Ab.solve(b, **kw)
+    assert PLAN_STATS["analyze"] == 1, PLAN_STATS
+    assert PLAN_STATS["setup"] == 1, PLAN_STATS
+    # PR-4 follow-up: the batched hierarchy builds through ONE vmapped
+    # Galerkin trace (amg_numeric), not one per batch element
+    assert PLAN_STATS["galerkin"] == 1, PLAN_STATS
+    np.testing.assert_allclose(np.asarray(xs), ref, rtol=1e-8, atol=1e-10)
+
+
+def test_batched_values_stencil_mg_parity():
+    kappa = jnp.ones((8, 8))
+    A = poisson2d_vc(kappa, use_stencil_kernel=True)
+    b = jnp.ones(A.shape[0])
+    kw = dict(backend="stencil", method="cg", precond="mg", tol=1e-11)
+    ref = _loop_reference(A, SCALES, b, **kw)
+    Ab = _batch(A, SCALES)
+    reset_plan_stats()
+    xs = Ab.solve(b, **kw)
+    assert PLAN_STATS["analyze"] == 1, PLAN_STATS
+    assert PLAN_STATS["setup"] == 1, PLAN_STATS
+    np.testing.assert_allclose(np.asarray(xs), ref, rtol=1e-8, atol=1e-10)
+
+
+def test_batched_setup_memo_reused_across_solves():
+    """Same stacked values array → the vmapped setup is memoized (a
+    tolerance sweep over a batch costs one setup, like the single case)."""
+    A = poisson2d(8)
+    b = jnp.ones(A.shape[0])
+    Ab = _batch(A, SCALES)
+    cfg = make_config(Ab, backend="jnp", method="cg", tol=1e-8)
+    plan = get_plan(Ab, cfg)
+    reset_plan_stats()
+    plan.solve(Ab, b, cfg=cfg)
+    plan.solve(Ab, b, cfg=dispatch.SolverConfig(
+        backend="jnp", method="cg", tol=1e-10, precond="jacobi"))
+    assert PLAN_STATS["setup"] == 1, PLAN_STATS
+    assert PLAN_STATS["setup_reuse"] == 1, PLAN_STATS
+
+
+def test_batched_values_jit_and_grad():
+    """The batched path stays differentiable and jit-safe end to end."""
+    A = poisson2d(6)
+    b = jnp.ones(A.shape[0])
+    vals = jnp.stack([A.val * s for s in SCALES])
+
+    def loss(v):
+        xs = A.with_values(v).solve(b, backend="jnp", method="cg", tol=1e-12)
+        return jnp.sum(xs ** 2)
+
+    g = jax.jit(jax.grad(loss))(vals)
+    def loss_dense(v):
+        X = jax.vmap(lambda vi: jnp.linalg.solve(
+            A.with_values(vi).todense(), b))(v)
+        return jnp.sum(X ** 2)
+    gd = jax.grad(loss_dense)(vals)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(gd),
+                               rtol=1e-6, atol=1e-8)
+
+
+# ---------------------------------------------------------------------------
+# multi-rhs: block-CG and the fused block-Jacobi path
+# ---------------------------------------------------------------------------
+
+def test_block_cg_multi_rhs_matches_per_rhs_cg():
+    A = poisson2d(8)
+    n = A.shape[0]
+    rng = np.random.default_rng(3)
+    B = jnp.asarray(np.vstack([np.ones(n), rng.normal(size=n),
+                               rng.normal(size=n)]))
+    ref = np.linalg.solve(np.asarray(A.todense()), np.asarray(B).T).T
+    X = A.solve(B, backend="jnp", method="block_cg", tol=1e-11)
+    np.testing.assert_allclose(np.asarray(X), ref, rtol=1e-8, atol=1e-10)
+    # coupled block iteration: the whole block takes no more iterations
+    # than the hardest rhs does alone
+    cfg_b = make_config(A, backend="jnp", method="block_cg", tol=1e-11)
+    plan = get_plan(A, cfg_b)
+    _, info_b = plan.solve(A, B, cfg=cfg_b)
+    cfg_c = make_config(A, backend="jnp", method="cg", tol=1e-11)
+    _, info_c = plan.solve(A, B, cfg=cfg_c)
+    assert int(info_b.iters) <= int(np.max(np.asarray(info_c.iters)))
+    assert bool(np.all(np.asarray(info_b.converged)))
+    assert info_b.resnorm.shape == (3,)
+
+
+def test_block_cg_duplicate_rhs_is_breakdown_free():
+    A = poisson2d(8)
+    n = A.shape[0]
+    b = jnp.ones(n)
+    B = jnp.stack([b, 2.0 * b, b])      # rank-1 block
+    X = A.solve(B, backend="jnp", method="block_cg", tol=1e-10)
+    ref = np.linalg.solve(np.asarray(A.todense()), np.asarray(B).T).T
+    np.testing.assert_allclose(np.asarray(X), ref, rtol=1e-8, atol=1e-10)
+
+
+def test_block_cg_single_rhs_degenerates_to_vector():
+    A = poisson2d(8)
+    b = jnp.ones(A.shape[0])
+    x = A.solve(b, backend="jnp", method="block_cg", tol=1e-11)
+    assert x.shape == b.shape
+    ref = np.linalg.solve(np.asarray(A.todense()), np.asarray(b))
+    np.testing.assert_allclose(np.asarray(x), ref, rtol=1e-8, atol=1e-10)
+
+
+def test_multi_rhs_block_jacobi_through_fused_step():
+    """Multi-rhs + block-Jacobi preconditioning through the fused step
+    kernels (PR-6) matches the plain path."""
+    A = poisson2d(8)
+    n = A.shape[0]
+    rng = np.random.default_rng(5)
+    B = jnp.asarray(rng.normal(size=(4, n)))
+    kw = dict(backend="pallas", method="cg", precond="block_jacobi",
+              tol=1e-11)
+    with sla_options.options(fused_step="off"):
+        X_plain = A.solve(B, **kw)
+    with sla_options.options(fused_step="on"):
+        X_fused = A.solve(B, **kw)
+    np.testing.assert_allclose(np.asarray(X_fused), np.asarray(X_plain),
+                               rtol=1e-8, atol=1e-10)
+    with sla_options.options(fused_step="on"):
+        X_blk = A.solve(B, method="block_cg", backend="jnp",
+                        precond="block_jacobi", tol=1e-11)
+    ref = np.linalg.solve(np.asarray(A.todense()), np.asarray(B).T).T
+    np.testing.assert_allclose(np.asarray(X_blk), ref, rtol=1e-8, atol=1e-10)
+
+
+# ---------------------------------------------------------------------------
+# plan cache byte budget
+# ---------------------------------------------------------------------------
+
+def test_plan_nbytes_positive_and_plausible():
+    A = poisson2d(8)
+    plan = A.plan(backend="jnp", method="cg")
+    nb = plan.nbytes()
+    # at least the pattern index arrays must be counted
+    assert nb >= A.row.nbytes + A.col.nbytes
+    direct = A.plan(backend="direct")
+    assert direct.nbytes() > 0
+
+
+def test_plan_cache_byte_budget_evicts_lru():
+    A = poisson2d(8)
+    p1 = A.plan(backend="jnp", method="cg")
+    budget = int(p1.nbytes() * 1.5)
+    A._plans.clear()
+    reset_plan_stats()
+    with sla_options.options(plan_cache_bytes=budget):
+        A.plan(backend="jnp", method="cg")
+        assert PLAN_STATS["evictions"] == 0
+        A.plan(backend="jnp", method="bicgstab")   # over budget → evict cg
+        assert PLAN_STATS["evictions"] == 1, PLAN_STATS
+        A.plan(backend="jnp", method="bicgstab")   # still resident
+        assert PLAN_STATS["cache_hit"] == 1, PLAN_STATS
+        A.plan(backend="jnp", method="cg")         # re-analyzed
+        assert PLAN_STATS["cache_miss"] == 3, PLAN_STATS
+    assert A._plans.total_bytes > 0
+
+
+def test_plan_cache_byte_budget_keeps_oversized_single_entry():
+    A = poisson2d(8)
+    A._plans.clear()
+    reset_plan_stats()
+    with sla_options.options(plan_cache_bytes=1):   # below any plan's size
+        p = A.plan(backend="jnp", method="cg")
+        assert A._plans.get(("jnp", "cg", "jacobi")) is p   # still cached
+        assert A.plan(backend="jnp", method="cg") is p
+
+
+# ---------------------------------------------------------------------------
+# the serving driver
+# ---------------------------------------------------------------------------
+
+def test_solve_server_groups_and_orders():
+    from repro.launch.solve_serve import SolveRequest, SolveServer
+    A1, A2 = poisson2d(6), poisson2d(7)
+    rng = np.random.default_rng(0)
+    reqs, refs = [], []
+    for i in range(10):
+        A0 = A1 if i % 2 == 0 else A2      # interleaved patterns
+        s = float(rng.uniform(0.8, 1.2))
+        Ai = A0.with_values(A0.val * s)
+        bi = jnp.asarray(rng.normal(size=A0.shape[0]))
+        reqs.append(SolveRequest(Ai, bi, {"backend": "jnp", "method": "cg",
+                                          "tol": 1e-10}))
+        refs.append(np.linalg.solve(np.asarray(Ai.todense()),
+                                    np.asarray(bi)))
+    server = SolveServer(max_batch=8)
+    reset_plan_stats()
+    out = server.submit_batch(reqs)
+    # one vmapped dispatch per pattern group, results in request order
+    assert server.stats["dispatches"] == 2, server.stats
+    assert PLAN_STATS["analyze"] == 2, PLAN_STATS
+    for res, ref in zip(out, refs):
+        assert res.reason == "converged"
+        np.testing.assert_allclose(np.asarray(res.x), ref,
+                                   rtol=1e-7, atol=1e-9)
+    # 5 requests padded to 8 slots per group
+    assert server.stats["padded_slots"] == 16
+    assert server.occupancy == pytest.approx(10 / 16)
+
+
+def test_serve_smoke_report():
+    from repro.launch.solve_serve import serve
+    rep = serve(n_requests=8, grid=6, n_patterns=1, max_batch=8,
+                check=True)   # parity asserted inside
+    assert rep["plan_stats"]["analyze"] == 1
+    assert rep["converged"]
+    for side in ("batched", "sequential"):
+        assert rep[side]["solves_per_sec"] > 0
+        assert rep[side]["p99_ms"] >= rep[side]["p50_ms"]
+    assert rep["occupancy"] == 1.0
