@@ -1,0 +1,75 @@
+"""Bench-smoke gate over the table3 artifact (CI goes red on regression).
+
+    PYTHONPATH=src python -m benchmarks.check_table3 BENCH_table3.json
+
+Asserts the PR-9 supernodal claims hold on every run:
+
+- supernodal numeric factorize >= ``MIN_FACTOR_SPEEDUP`` x the scalar
+  packed-scan at the largest smoke rung (the paper-scale claim is 10x at
+  n=10⁵; the CI smoke rung n=10⁴ must clear 3x);
+- the ``budget_probe`` row exists, was routed to the direct backend by the
+  raised ``direct_budget`` (10⁵ — n=40K sat above the old 24576 crossover),
+  and its solve completed with a small residual.
+"""
+import json
+import re
+import sys
+
+MIN_FACTOR_SPEEDUP = 3.0
+MAX_PROBE_RESIDUAL = 1e-5
+
+
+def _derived(row):
+    return dict(kv.split("=", 1) for kv in row["derived"].split(";")
+                if "=" in kv)
+
+
+def check(path: str) -> None:
+    with open(path) as f:
+        data = json.load(f)
+    rows = data["rows"]
+
+    by_dof = {}
+    for row in rows:
+        m = re.match(r"table3/(factor_supernodal|factor_scalar)/dof=(\d+)",
+                     row["name"])
+        if m:
+            by_dof.setdefault(int(m.group(2)), {})[m.group(1)] = row
+    pairs = {d: r for d, r in by_dof.items()
+             if "factor_supernodal" in r and "factor_scalar" in r}
+    if not pairs:
+        raise SystemExit("check_table3: no supernodal/scalar factor row "
+                         "pairs in the artifact")
+    dof = max(pairs)
+    sn = pairs[dof]["factor_supernodal"]["us_per_call"]
+    sc = pairs[dof]["factor_scalar"]["us_per_call"]
+    speedup = sc / max(sn, 1e-9)
+    print(f"check_table3: dof={dof} supernodal factorize {sn:.0f}us vs "
+          f"scalar {sc:.0f}us -> {speedup:.2f}x "
+          f"(gate {MIN_FACTOR_SPEEDUP:.1f}x)")
+    if speedup < MIN_FACTOR_SPEEDUP:
+        raise SystemExit(
+            f"check_table3: supernodal factorize speedup {speedup:.2f}x "
+            f"< {MIN_FACTOR_SPEEDUP:.1f}x at dof={dof}")
+
+    probes = [r for r in rows if r["name"].startswith("table3/budget_probe/")]
+    if not probes:
+        raise SystemExit("check_table3: budget_probe row missing — the "
+                         "raised direct_budget solve did not run")
+    d = _derived(probes[0])
+    if d.get("backend") != "direct":
+        raise SystemExit(
+            f"check_table3: budget_probe auto-dispatched to "
+            f"{d.get('backend')!r}, expected 'direct' (direct_budget="
+            f"{d.get('budget')})")
+    res = float(d.get("residual", "inf"))
+    if not res < MAX_PROBE_RESIDUAL:
+        raise SystemExit(
+            f"check_table3: budget_probe residual {res:.1e} >= "
+            f"{MAX_PROBE_RESIDUAL:.0e}")
+    print(f"check_table3: budget_probe ok (backend=direct, "
+          f"residual={res:.1e}, budget={d.get('budget')})")
+
+
+if __name__ == "__main__":
+    check(sys.argv[1] if len(sys.argv) > 1 else "BENCH_table3.json")

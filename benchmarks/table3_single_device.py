@@ -34,9 +34,18 @@ from .common import csv_row, timeit
 MD_ANALYZE_CAP = 10_000      # exact-MD A/B rung cap: the n=10⁴ rung is the
                              # ISSUE-5 acceptance point (seed path ~14 s)
 
+# eager-analysis row cap: direct_budget is now 10⁵ (the supernodal panel
+# kernels moved the crossover), but the bench still bounds the rungs that
+# pay the one-time python symbolic pass so the CI smoke stays minutes-sized;
+# the budget itself is exercised by the budget_probe row below
+DIRECT_ROW_CAP = 40_000
+
 SMOKE_LADDER = [32, 100]                # 1K, 10K DOF — per-PR CI smoke
 LADDER = [32, 100, 200, 400]            # 1K, 10K, 40K, 160K DOF
 FULL_LADDER = LADDER + [1000]           # +1M DOF with --full
+BUDGET_PROBE_NG = 200                   # 40K DOF: above the OLD 24576 budget
+                                        # — auto-dispatch must pick direct
+                                        # under the raised 10⁵ budget
 
 
 def mem_estimate_bytes(n, nnz, dtype_bytes=8):
@@ -61,9 +70,9 @@ def run(full: bool = False, smoke: bool = False):
                 jax.jit(lambda val, bb: sparse_solve_with_info(
                     cfg_d, A.with_values(val), bb)), A.val, b)
             entries["dense"] = (t, float(info.resnorm))
-        # explicit backend="direct" tolerates a bigger one-time analyze than
-        # the silent auto window — benchmark up to twice the auto budget
-        if n <= 2 * DIRECT_BUDGET:
+        # explicit backend="direct" rows pay the one-time eager analyze —
+        # bounded by the bench-local cap, not the (now much larger) budget
+        if n <= DIRECT_ROW_CAP:
             # symbolic-analyze time: the stage is paid once per pattern, so
             # a single sample IS the amortized reality — and the SAME plan
             # the timed get_plan analyzes then serves the direct solve rows
@@ -86,12 +95,41 @@ def run(full: bool = False, smoke: bool = False):
                     t_md, 0.0,
                     f"nnzL={art_m.stats['nnz_L']};"
                     f"fill_vs_amd={st_a['nnz_L']/max(art_m.stats['nnz_L'], 1):.3f}")
+            # eager: the supernodal numeric drivers jit per panel bucket;
+            # an outer jit would inline every bucket into one giant XLA
+            # program (minutes of compile at the larger rungs)
             t, (x, info) = timeit(
-                jax.jit(lambda val, bb: sparse_solve_with_info(
-                    cfg_s, A.with_values(val), bb)), A.val, b)
+                lambda val, bb: sparse_solve_with_info(
+                    cfg_s, A.with_values(val), bb), A.val, b)
             st = plan.artifacts["direct"].stats
             entries["direct"] = (t, float(info.resnorm),
                                  f"nnzL={st['nnz_L']};levels={st['n_levels']}")
+            # supernodal vs scalar A/B on the numeric stage itself: the same
+            # pattern analyzed twice (panel program / packed scan), factorize
+            # and the triangular solves timed on each — the PR-9 headline
+            from repro.core.direct import factored_solve, numeric_factor
+            art_sn = symbolic_factor(np.asarray(A.row), np.asarray(A.col),
+                                     n, supernodal="on")
+            art_sc = symbolic_factor(np.asarray(A.row), np.asarray(A.col),
+                                     n, supernodal="off")
+            t_fs, C_sn = timeit(
+                lambda v: numeric_factor(art_sn, v), A.val)
+            t_fc, C_sc = timeit(jax.jit(
+                lambda v: numeric_factor(art_sc, v)), A.val)
+            t_ss, _ = timeit(
+                lambda C, bb: factored_solve(art_sn, C, bb), C_sn, b)
+            t_sc, _ = timeit(jax.jit(
+                lambda C, bb: factored_solve(art_sc, C, bb)), C_sc, b)
+            sn_st = art_sn.snode.stats if art_sn.snode is not None else {}
+            entries["factor_supernodal"] = (
+                t_fs, 0.0,
+                f"speedup={t_fc / max(t_fs, 1e-12):.2f}x;"
+                f"panel_fraction={sn_st.get('panel_fraction', 0.0):.3f};"
+                f"mean_snode_width={sn_st.get('mean_snode_width', 0.0):.2f}")
+            entries["factor_scalar"] = (t_fc, 0.0)
+            entries["solve_supernodal"] = (
+                t_ss, 0.0, f"speedup={t_sc / max(t_ss, 1e-12):.2f}x")
+            entries["solve_scalar"] = (t_sc, 0.0)
         cfg_cg = make_config(A, backend="jnp", method="cg", tol=1e-7,
                              maxiter=20000)
         t, (x, info) = timeit(
@@ -112,7 +150,7 @@ def run(full: bool = False, smoke: bool = False):
         # PR-4 rows; analyze cost is paid once before timing (plan cached).
         # Capped like the direct rows: the eager ILU/AMG symbolic pass is
         # python-loop-bound, so the biggest ladder rungs skip it.
-        if n <= 2 * DIRECT_BUDGET:
+        if n <= DIRECT_ROW_CAP:
             for pname, At, cfg_p in (
                     ("jacobi", A, cfg_cg),
                     ("ilu", A, make_config(A, backend="jnp", method="cg",
@@ -139,6 +177,26 @@ def run(full: bool = False, smoke: bool = False):
             rows.append(csv_row(
                 f"table3/{name}/dof={n}", t * 1e6,
                 f"residual={res:.1e};mem_est={mem/2**20:.1f}MiB{extra}"))
+
+    # budget probe: n=40K sits ABOVE the pre-supernodal 24576 crossover —
+    # auto dispatch must now route it to the direct backend (budget 10⁵)
+    # and the solve must complete; the bench-smoke gate checks this row
+    from repro.core.dispatch import select_backend
+    Ap = poisson2d(BUDGET_PROBE_NG, dtype=np.float64)
+    np_ = Ap.shape[0]
+    backend, method = select_backend(Ap, "auto", "auto")
+    cfg_b = make_config(Ap, backend=backend, method=method)
+    bp = jnp.ones(np_)
+    # eager (no outer jit): the supernodal drivers jit per panel bucket —
+    # wrapping the whole 40K-DOF solve in one jit would inline every bucket
+    # into a single giant XLA program and spend minutes compiling it
+    t, (x, info) = timeit(
+        lambda val, bb: sparse_solve_with_info(
+            cfg_b, Ap.with_values(val), bb), Ap.val, bp)
+    rows.append(csv_row(
+        f"table3/budget_probe/dof={np_}", t * 1e6,
+        f"residual={float(info.resnorm):.1e};backend={backend};"
+        f"budget={DIRECT_BUDGET}"))
     return rows
 
 

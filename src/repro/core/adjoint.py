@@ -328,8 +328,9 @@ def sparse_slogdet(A: SparseTensor):
         @jax.custom_vjp
         def sld(val):
             C = plan.setup(plan.matrix(val))      # memoized numeric factors
-            piv = C[:n]
-            return jnp.prod(jnp.sign(piv)), jnp.sum(jnp.log(jnp.abs(piv)))
+            # pivot-block aware: 2x2 Bunch–Kaufman pairs contribute their
+            # block determinant, not the raw diagonal product
+            return _direct.factor_slogdet(art, C)
 
         def fwd(val):
             return sld(val), (val,)

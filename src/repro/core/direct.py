@@ -29,9 +29,16 @@ graph explicitly:
    adjoint.
 
 ``numeric_factor(art, val)``      — traced-safe (the ``setup`` stage).  Runs
-the numeric LU/LDLᵀ over the precomputed fill pattern: per scan step, one
-fused pivot-divide + scatter-update pair.  Jits, vmaps over batched values,
-and re-traces nothing symbolic.
+the numeric LU/LDLᵀ over the precomputed fill pattern.  Two programs share
+the storage: the scalar packed scan (per step one fused pivot-divide +
+scatter-update pair) and — when the analyze stage emitted a supernodal
+program (the ``supernodal`` option, auto) — batched dense *panel* kernels:
+columns with identical fill structure are grouped into supernodes, each
+assembly-tree level factors all its panels in one kernel launch, and the
+Schur complement is a lane-batched GEMM extend-add
+(:mod:`repro.kernels.supernode`; pure-jnp oracles on CPU).  Both write the
+same factor vector bit-compatibly.  Jits, vmaps over batched values, and
+re-traces nothing symbolic.
 
 ``factored_solve(art, C, b)``     — two level-scheduled triangular sweeps
 (the ``solve`` stage).  ``transposed=True`` swaps the sweeps (Uᵀ then Lᵀ),
@@ -48,9 +55,13 @@ Storage layout of the factor vector ``C`` (length ``nnzF + 2``)::
 
 For symmetric values (method ``ldlt``) the same kernel computes U = D·Lᵀ in
 the mirror half, i.e. an LDLᵀ factorization with D folded into U; the solve
-and adjoint exploit self-adjointness through the plan layer.  No numerical
-pivoting is performed — intended for SPD / diagonally-dominant systems
-(pivoting for indefinite systems is a ROADMAP follow-up).
+and adjoint exploit self-adjointness through the plan layer.  No *numerical*
+pivoting is performed, but ``pivot_blocks="auto"`` places **static
+Bunch–Kaufman 2×2 pivot blocks** at analyze time (etree-guided column
+amalgamation inside supernodes), so structurally-indefinite systems —
+saddle-point KKT blocks with numerically-zero diagonals — factor exactly
+instead of through the zero-pivot perturbation guard;
+:func:`factor_slogdet` accounts the 2×2 block determinants.
 
 ``incomplete=True`` restricts the update program to the original pattern
 (zero fill): that is ILU(0)/IC(0), which :mod:`repro.core.precond` exposes as
@@ -61,12 +72,15 @@ pattern: ``backend="direct"`` solves, ``precond="ilu"``, the AMG coarsest
 level (:mod:`repro.core.multigrid`), the ``schwarz``/``schwarz2`` subdomain
 and coarse factors (:mod:`repro.core.distributed`), and ``slogdet``.  The
 auto-dispatch policy prefers the direct backend up to
-the ``direct_budget`` option (:mod:`repro.core.options`; raised to 24576 by the AMD + etree
-pipeline; ~7–8 s one-time analyze at that ceiling, amortized across the
-plan's lifetime) and 4× that under ``props["illcond_hint"]``.
+the ``direct_budget`` option (:mod:`repro.core.options`; raised to 24576 by
+the AMD + etree pipeline, then to 10⁵ by the supernodal panel kernels — the
+sequential scalar scan is no longer the numeric-stage bottleneck; the
+one-time analyze amortizes across the plan's lifetime) and 4× that under
+``props["illcond_hint"]``.
 """
 from __future__ import annotations
 
+import functools
 from typing import List, NamedTuple, Optional, Tuple
 
 import jax
@@ -76,8 +90,11 @@ from jax import lax
 
 __all__ = [
     "DirectArtifacts", "symbolic_factor", "numeric_factor", "factored_solve",
+    "factor_slogdet",
     "SchwarzArtifacts", "schwarz_symbolic", "schwarz_numeric",
 ]
+
+SN_MAX_W = 32            # supernode width cap (panel column count per bucket)
 
 
 class PackedFactor(NamedTuple):
@@ -109,6 +126,54 @@ class PackedSweep(NamedTuple):
     dpiv: jax.Array
 
 
+class SnodeBucket(NamedTuple):
+    """One (assembly-level, padded-shape) bucket of supernodes.
+
+    ``k`` supernode lanes share the padded panel shape (wb, rb); lanes past
+    the true count are all-pad (``wvec = 0``, slots at the scratch sink).
+    All index arrays address the packed factor vector ``C``:
+
+    - ``pidx`` (k, wb+rb, wb): gather/scatter slots for the P panel —
+      rows 0..wb-1 the dense diagonal block (pivots/L/U-mirror), rows wb..
+      the sub-diagonal L panel over the supernode's row structure R_s;
+    - ``qidx`` (k, wb, rb): the U panel (rows of U over R_s);
+    - ``uidx`` (k, rb, rb): the extend-add targets — every (R_s × R_s) slot
+      (present by fill closure) the Schur GEMM scatter-subtracts into;
+    - ``rows`` (k, wb+rb): permuted row ids (block cols then R_s; pads → n,
+      the solution vector's scratch element);
+    - ``bkm`` (k, wb): static Bunch–Kaufman pair-start flags.
+    """
+    wb: int
+    rb: int
+    pairs: bool
+    pidx: jax.Array
+    qidx: jax.Array
+    uidx: jax.Array
+    rows: jax.Array
+    wvec: jax.Array          # (k,) true widths
+    rvec: jax.Array          # (k,) true sub-row counts
+    bkm: jax.Array
+
+
+class SnodeProgram(NamedTuple):
+    """Supernodal panel program — the dense-panel alternative to the scalar
+    packed-scan program, emitted by the same symbolic analysis.
+
+    ``schedule`` is a tuple of assembly-tree levels, each a tuple of
+    :class:`SnodeBucket`; levels run ascending for the factorization and the
+    forward/Uᵀ sweeps, descending for the backward/Lᵀ sweeps.  The pair
+    arrays feed :func:`factor_slogdet` (a 2x2 pivot contributes
+    ``log|a·e − b·c|``, not ``log|a| + log|e|``): ``pair_cols`` (p, 2) the
+    permuted pivot columns (t, t+1), ``pair_off`` (p, 2) the C slots of the
+    raw b = U(t,t+1) and c = L(t+1,t) entries, ``unpaired`` (n,) the columns
+    still owned by 1x1 pivots."""
+    schedule: tuple
+    pair_cols: jax.Array
+    pair_off: jax.Array
+    unpaired: jax.Array
+    stats: dict              # n_snodes, mean_width, panel_fraction, n_groups
+
+
 class DirectArtifacts(NamedTuple):
     """Product of the symbolic analysis — pattern-only, shared by every
     ``with_values`` refresh, every batch element, and the adjoint."""
@@ -121,6 +186,7 @@ class DirectArtifacts(NamedTuple):
     row_sweep: PackedSweep
     col_sweep: PackedSweep
     stats: dict              # nnz_L, fill_ratio, n_levels, flops, n_steps
+    snode: Optional[SnodeProgram] = None    # dense-panel program (else scalar)
 
 
 # ---------------------------------------------------------------------------
@@ -357,8 +423,8 @@ def _amd_order(row: np.ndarray, col: np.ndarray, n: int, *,
     return perm
 
 
-def _etree_fill(n: int, rptr: np.ndarray,
-                rcol: np.ndarray) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+def _etree_fill(n: int, rptr: np.ndarray, rcol: np.ndarray
+                ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
     """Elimination tree + static fill pattern + level schedule in O(nnz(L)).
 
     One pass of Liu's etree construction fused with the row-subtree
@@ -369,8 +435,9 @@ def _etree_fill(n: int, rptr: np.ndarray,
     materialized).  Longest-path levels of the elimination DAG
     (``level(i) > level(j)`` for every L(i,j)) ride the same pass.
 
-    Returns ``(Ri, Rj, level)`` — L entries as (row, col) index arrays in
-    permuted coordinates plus the per-node level.
+    Returns ``(Ri, Rj, level, parent)`` — L entries as (row, col) index
+    arrays in permuted coordinates, the per-node level, and the etree parent
+    (-1 at roots; the supernode partition reads ``parent[j] == j+1`` chains).
     """
     parent = [-1] * n
     mark = [-1] * n
@@ -398,7 +465,8 @@ def _etree_fill(n: int, rptr: np.ndarray,
                 j = pj
         level[i] = lv + 1
     return (np.asarray(ei, dtype=np.int64), np.asarray(ej, dtype=np.int64),
-            np.asarray(level, dtype=np.int64))
+            np.asarray(level, dtype=np.int64),
+            np.asarray(parent, dtype=np.int64))
 
 
 def _pattern_levels(n: int, rptr: np.ndarray, rcol: np.ndarray) -> np.ndarray:
@@ -665,8 +733,265 @@ def _emit_sweep(n: int, nnzL: int, tgt: np.ndarray, src: np.ndarray,
         dpiv=jnp.asarray(grid(d_pos, d_val, wd, sone), jnp.int32))
 
 
+# ---------------------------------------------------------------------------
+# supernodal analysis (fundamental chains -> dense-panel program)
+# ---------------------------------------------------------------------------
+
+def _supernode_partition(parent: np.ndarray, counts: np.ndarray,
+                         max_w: int) -> np.ndarray:
+    """Fundamental supernodes of the filled pattern, width-capped.
+
+    Column ``j+1`` extends column ``j``'s supernode iff ``parent[j] == j+1``
+    and ``counts[j+1] == counts[j] - 1`` — by the etree subset property this
+    forces ``struct(j) = {j+1} ∪ struct(j+1)``, i.e. a dense trapezoidal
+    panel.  AMD's hash-merged supervariables are expanded adjacently, so they
+    land in one chain for free.  Returns supernode boundaries ``sptr``
+    (ns+1,) with runs capped at ``max_w`` columns.
+    """
+    n = counts.size
+    if n == 0:
+        return np.zeros(1, dtype=np.int64)
+    chain = np.zeros(n, dtype=bool)
+    if n > 1:
+        j = np.arange(n - 1, dtype=np.int64)
+        chain[1:] = (parent[:-1] == j + 1) & (counts[1:] == counts[:-1] - 1)
+    starts = [0]
+    w = 1
+    for jj in range(1, n):
+        if chain[jj] and w < max_w:
+            w += 1
+        else:
+            starts.append(jj)
+            w = 1
+    starts.append(n)
+    return np.asarray(starts, dtype=np.int64)
+
+
+def _amalgamate_pairs(n: int, Ri: np.ndarray, Rj: np.ndarray,
+                      parent: np.ndarray, Li: np.ndarray, Lptr: np.ndarray,
+                      sptr: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Relaxed amalgamation: pad singleton etree-chain columns so they merge
+    into pairable supernodes (the static Bunch–Kaufman prerequisite).
+
+    A width-1 supernode {j} with ``parent[j] == j+1`` (e.g. the sibling-leaf
+    chains AMD emits around indefinite saddle blocks) is padded to
+    ``struct(j) := {j+1} ∪ struct(j+1)`` — a pure superset by the etree
+    property, so fill closure and the level schedule stay valid — which makes
+    the fundamental-chain condition hold and fuses {j} with the following
+    supernode on re-partition.  Merges never chain: a merge target is
+    consumed and cannot initiate its own merge (left-to-right scan), keeping
+    the extra fill at one struct-union per pair instead of densifying
+    tridiagonal-like patterns.  Returns (possibly padded) (Ri, Rj).
+    """
+    w = np.diff(sptr)
+    pad_i: List[np.ndarray] = []
+    pad_j: List[np.ndarray] = []
+    consumed = False
+    for s in range(w.size - 1):
+        if consumed:                    # this snode is a merge target
+            consumed = False
+            continue
+        j = int(sptr[s])
+        if w[s] != 1 or parent[j] != j + 1:
+            continue
+        cur = Li[Lptr[j]:Lptr[j + 1]]
+        nxt = Li[Lptr[j + 1]:Lptr[j + 2]]
+        target = np.union1d(nxt, np.asarray([j + 1], dtype=np.int64))
+        assert np.setdiff1d(cur, target).size == 0, \
+            "etree subset property violated in amalgamation"
+        extra = np.setdiff1d(target, cur)
+        if extra.size:
+            pad_i.append(extra.astype(np.int64))
+            pad_j.append(np.full(extra.size, j, dtype=np.int64))
+        consumed = True
+    if not pad_i:
+        return Ri, Rj
+    return (np.concatenate([Ri] + pad_i), np.concatenate([Rj] + pad_j))
+
+
+def _sn_slots(ri, cj, n: int, nnzL: int, lkeys: np.ndarray, valid):
+    """Vectorized C-slot lookup for supernode index grids.
+
+    Entry (ri, cj): the pivot slot on the diagonal, the column-major L slot
+    below it, the mirror-U slot above it; invalid (pad) entries land on the
+    scratch sink.  Asserts fill closure for every valid off-diagonal entry.
+    """
+    ri = ri.astype(np.int64)
+    cj = cj.astype(np.int64)
+    key = np.where(ri > cj, cj * n + ri, ri * n + cj)
+    t = np.searchsorted(lkeys, key)
+    tc = np.minimum(t, max(nnzL - 1, 0))
+    ok = (lkeys[tc] == key) if nnzL else np.zeros(key.shape, dtype=bool)
+    assert bool((ok | ~valid | (ri == cj)).all()), \
+        "supernode slot closure violated"
+    slot = np.where(ri == cj, ri,
+                    np.where(ri > cj, n + tc, n + nnzL + tc))
+    return np.where(valid, slot, n + 2 * nnzL).astype(np.int32)
+
+
+def _pow2(x: np.ndarray, lo: int) -> np.ndarray:
+    v = np.maximum(np.asarray(x, dtype=np.int64), lo)
+    out = np.ones_like(v)
+    while True:
+        mask = out < v
+        if not mask.any():
+            return out
+        out = np.where(mask, out * 2, out)
+
+
+def _emit_snode(n: int, nnzL: int, Li: np.ndarray, Lptr: np.ndarray,
+                Ljc: np.ndarray, counts: np.ndarray, lkeys: np.ndarray,
+                sptr: np.ndarray, want_pairs: bool,
+                mode: str) -> Optional[SnodeProgram]:
+    """Emit the supernodal panel program (or None when ``mode="auto"``
+    declines — narrow chains / deep schedules where the scalar scan wins).
+
+    Supernodes are scheduled by assembly-tree level (longest path over
+    cross-supernode L edges — every edge source has the smaller supernode id,
+    so one ascending pass computes levels), then bucketed by padded panel
+    shape (pow2 width/sub-row counts, pow2 lane counts) so the number of
+    distinct compiled panel kernels is logarithmic in problem size.
+    """
+    ns = sptr.size - 1
+    if ns == 0:
+        return None
+    c0 = sptr[:-1]
+    c1 = sptr[1:]
+    w = c1 - c0
+    r = counts[c1 - 1]
+    assert bool((counts[c0] == w - 1 + r).all()), \
+        "fundamental supernode chain violated"
+    mean_w = float(n) / float(ns)
+    col2s = np.repeat(np.arange(ns, dtype=np.int64), w)
+
+    # assembly-tree levels over cross-supernode dependencies
+    es = col2s[Ljc]
+    ed = col2s[Li]
+    msk = es != ed
+    es, ed = es[msk], ed[msk]
+    eo = np.argsort(ed, kind="stable")
+    es, ed = es[eo], ed[eo]
+    eptr = np.searchsorted(ed, np.arange(ns + 1, dtype=np.int64))
+    slev = np.zeros(ns, dtype=np.int64)
+    for s in range(ns):
+        lo, hi = eptr[s], eptr[s + 1]
+        if hi > lo:
+            slev[s] = int(slev[es[lo:hi]].max()) + 1
+
+    wb_of = _pow2(w, 2)
+    rb_of = _pow2(r, 4)
+    groups: dict = {}
+    for s in range(ns):
+        groups.setdefault(
+            (int(slev[s]), int(wb_of[s]), int(rb_of[s])), []).append(s)
+    n_groups = len(groups)
+    nnz_sn = w * r + (w * (w - 1)) // 2
+    panel_fraction = (float(nnz_sn[w >= 2].sum()) / float(max(nnzL, 1)))
+    stats = {"n_snodes": int(ns), "mean_snode_width": mean_w,
+             "panel_fraction": panel_fraction, "n_groups": n_groups,
+             "n_slevels": int(slev.max()) + 1 if ns else 0}
+
+    if mode == "auto" and not want_pairs:
+        # the panel path pays off when each bucketed kernel launch batches
+        # many supernode lanes (level-parallel elimination) — narrow snodes
+        # are fine (2-D Poisson averages ~1.3 and still wins 3-4x on the
+        # lane batching alone), but a sequential chain — e.g. a tridiagonal,
+        # where every snode is its own level with one lane — would serialize
+        # n tiny kernel launches and lose to the scalar scan
+        lanes_per_group = float(ns) / float(max(n_groups, 1))
+        if n < 512 or lanes_per_group < 4.0 or n_groups > 4096:
+            return None
+
+    nlev = int(slev.max()) + 1 if ns else 1
+    by_level: List[List[SnodeBucket]] = [[] for _ in range(nlev)]
+    pair_p1: List[np.ndarray] = []
+    for (lv, wb, rb), members in sorted(groups.items()):
+        idx = np.asarray(members, dtype=np.int64)
+        k = idx.size
+        kp = 1 << max(int(k - 1).bit_length(), 0)   # pow2 lanes, pads no-op
+        c0g = c0[idx]
+        wg = w[idx]
+        rg = r[idx]
+        aw = np.arange(wb, dtype=np.int64)
+        ar = np.arange(rb, dtype=np.int64)
+        tw = aw[None, :] < wg[:, None]
+        ta = ar[None, :] < rg[:, None]
+        rows_blk = np.where(tw, c0g[:, None] + aw[None, :], n)
+        pstart = Lptr[c1[idx] - 1]
+        gidx = np.minimum(pstart[:, None] + ar[None, :], max(nnzL - 1, 0))
+        rows_sub = np.where(ta, Li[gidx], n)
+        rows = np.concatenate([rows_blk, rows_sub], axis=1)   # (k, wb+rb)
+        cjs = c0g[:, None] + aw[None, :]                      # (k, wb)
+        vP = (rows < n)[:, :, None] & tw[:, None, :]
+        pidx = _sn_slots(rows[:, :, None], cjs[:, None, :], n, nnzL,
+                         lkeys, vP)
+        vQ = tw[:, :, None] & ta[:, None, :]
+        qidx = _sn_slots(cjs[:, :, None], rows_sub[:, None, :], n, nnzL,
+                         lkeys, vQ)
+        vU = ta[:, :, None] & ta[:, None, :]
+        uidx = _sn_slots(rows_sub[:, :, None], rows_sub[:, None, :], n, nnzL,
+                         lkeys, vU)
+        if want_pairs:
+            bkm = tw & (aw[None, :] % 2 == 0) & (aw[None, :] + 1 < wg[:, None])
+            for l in range(k):
+                offs = np.arange(0, int(wg[l]) - 1, 2, dtype=np.int64)
+                if offs.size:
+                    pair_p1.append(c0g[l] + offs)
+        else:
+            bkm = np.zeros((k, wb), dtype=bool)
+        if kp > k:                                            # pad lanes
+            pad = kp - k
+
+            def lanepad(arr, fill):
+                ext = np.full((pad,) + arr.shape[1:], fill, arr.dtype)
+                return np.concatenate([arr, ext], axis=0)
+
+            szero = np.int32(n + 2 * nnzL)
+            pidx = lanepad(pidx, szero)
+            qidx = lanepad(qidx, szero)
+            uidx = lanepad(uidx, szero)
+            rows = lanepad(rows, n)
+            wg = lanepad(wg, 0)
+            rg = lanepad(rg, 0)
+            bkm = lanepad(bkm, False)
+        by_level[lv].append(SnodeBucket(
+            wb=int(wb), rb=int(rb), pairs=bool(want_pairs and bkm.any()),
+            pidx=jnp.asarray(pidx), qidx=jnp.asarray(qidx),
+            uidx=jnp.asarray(uidx),
+            rows=jnp.asarray(rows.astype(np.int32)),
+            wvec=jnp.asarray(wg.astype(np.int32)),
+            rvec=jnp.asarray(rg.astype(np.int32)),
+            bkm=jnp.asarray(bkm)))
+
+    if pair_p1:
+        p1 = np.sort(np.concatenate(pair_p1))
+        key = p1 * np.int64(n) + (p1 + 1)          # L(t+1, t), col-major key
+        t = np.searchsorted(lkeys, key)
+        tc = np.minimum(t, max(nnzL - 1, 0))
+        assert bool((lkeys[tc] == key).all()), \
+            "pair pivot off the fundamental chain"
+        pair_cols = np.stack([p1, p1 + 1], axis=1)
+        pair_off = np.stack([n + nnzL + tc, n + tc], axis=1)   # (b, c) slots
+        unpaired = np.ones(n, dtype=bool)
+        unpaired[p1] = False
+        unpaired[p1 + 1] = False
+    else:
+        pair_cols = np.zeros((0, 2), dtype=np.int64)
+        pair_off = np.zeros((0, 2), dtype=np.int64)
+        unpaired = np.ones(n, dtype=bool)
+    stats["n_pair_pivots"] = int(pair_cols.shape[0])
+    return SnodeProgram(
+        schedule=tuple(tuple(b) for b in by_level),
+        pair_cols=jnp.asarray(pair_cols.astype(np.int32)),
+        pair_off=jnp.asarray(pair_off.astype(np.int32)),
+        unpaired=jnp.asarray(unpaired),
+        stats=stats)
+
+
 def symbolic_factor(row, col, n: int, *, ordering: str = "amd",
-                    incomplete: bool = False) -> DirectArtifacts:
+                    incomplete: bool = False,
+                    supernodal: Optional[str] = None,
+                    pivot_blocks: Optional[str] = None) -> DirectArtifacts:
     """Analyze one sparsity pattern for direct (or incomplete) factorization.
 
     This is the plan engine's ``analyze`` stage: values-free, eager numpy,
@@ -695,7 +1020,22 @@ def symbolic_factor(row, col, n: int, *, ordering: str = "amd",
         and kernels, zero fill (update tuples restricted to the original
         symmetrized pattern), no elimination tree needed.  Degree-based
         orderings are pointless at zero fill, so ``"amd"``/``"md"`` resolve
-        to ``"natural"`` (ILU(0) keeps the assembly order).
+        to ``"natural"`` (ILU(0) keeps the assembly order).  The supernodal
+        program needs the etree, so incomplete factorizations always stay on
+        the scalar path.
+    supernodal : ``"auto"``/``"on"``/``"off"`` — emit the dense-panel
+        supernodal program next to the scalar one (``numeric_factor`` and
+        ``factored_solve`` route through it when present).  ``None``
+        (default) reads the :mod:`repro.core.options` ``supernodal`` knob at
+        analyze time.  ``"auto"`` declines narrow-chain patterns where the
+        scalar scan wins; ``"off"`` is the A/B baseline.
+    pivot_blocks : ``"auto"`` requests static Bunch–Kaufman 2x2 pivot blocks
+        chosen at analyze time: singleton etree-chain columns are
+        amalgamated into pairable supernodes and every supernode's even
+        column offsets start a 2x2 pivot, eliminated jointly at numeric
+        time — indefinite (saddle-point) systems factor without the
+        zero-pivot perturbation stopgap.  Requires the supernodal path
+        (``supernodal="off"`` raises); ``None`` keeps plain 1x1 pivots.
 
     Raises ``ValueError`` when the pattern lacks a structurally full
     diagonal (no pivoting is performed, so every pivot must exist
@@ -708,11 +1048,13 @@ def symbolic_factor(row, col, n: int, *, ordering: str = "amd",
     may be captured here — that is ``setup``'s job.
     """
     with jax.ensure_compile_time_eval():
-        return _symbolic_factor(row, col, n, ordering, incomplete)
+        return _symbolic_factor(row, col, n, ordering, incomplete,
+                                supernodal, pivot_blocks)
 
 
-def _symbolic_factor(row, col, n: int, ordering: str,
-                     incomplete: bool) -> DirectArtifacts:
+def _symbolic_factor(row, col, n: int, ordering: str, incomplete: bool,
+                     supernodal: Optional[str] = None,
+                     pivot_blocks: Optional[str] = None) -> DirectArtifacts:
     row = np.asarray(row, dtype=np.int64)
     col = np.asarray(col, dtype=np.int64)
     from .sparse import has_full_diagonal
@@ -720,6 +1062,27 @@ def _symbolic_factor(row, col, n: int, ordering: str,
         raise ValueError(
             "direct factorization needs a structurally full diagonal "
             "(no pivoting); use an iterative backend for this pattern")
+
+    if supernodal is None:
+        from . import options as _options
+        supernodal = _options.current().supernodal
+    if supernodal not in ("auto", "on", "off"):
+        raise ValueError(
+            f"supernodal must be 'auto'|'on'|'off', got {supernodal!r}")
+    if pivot_blocks not in (None, "auto"):
+        raise ValueError(
+            f"pivot_blocks must be None or 'auto', got {pivot_blocks!r}")
+    want_pairs = pivot_blocks == "auto"
+    if incomplete:
+        if want_pairs:
+            raise ValueError(
+                "pivot_blocks needs the full (etree) factorization; "
+                "incomplete=True has no pivoting")
+        supernodal = "off"          # ILU(0) has no etree — scalar program
+    if want_pairs and supernodal == "off":
+        raise ValueError(
+            "pivot_blocks='auto' requires the supernodal path "
+            "(supernodal='off' keeps the scalar 1x1-pivot program)")
 
     if incomplete and ordering in ("amd", "md"):
         ordering = "natural"        # ILU(0) keeps the assembly order
@@ -742,8 +1105,9 @@ def _symbolic_factor(row, col, n: int, ordering: str,
         Ri, Rj = np.repeat(np.arange(n, dtype=np.int64),
                            np.diff(rptr)), rcol
         level = _pattern_levels(n, rptr, rcol)
+        parent = None
     else:                           # etree pass: fill without the filled graph
-        Ri, Rj, level = _etree_fill(n, rptr, rcol)
+        Ri, Rj, level, parent = _etree_fill(n, rptr, rcol)
     n_levels = int(level.max()) + 1 if n else 1
 
     # L pattern, column-major: column k holds sorted permuted row indices.
@@ -751,6 +1115,22 @@ def _symbolic_factor(row, col, n: int, ordering: str,
     Li = Ri[corder]
     counts = np.bincount(Rj, minlength=n).astype(np.int64)
     Lptr = np.concatenate([[0], np.cumsum(counts)])
+
+    # supernode partition (+ Bunch–Kaufman pair amalgamation, which pads the
+    # pattern — a superset, so ``level`` stays a valid schedule and every
+    # closure assert below still holds)
+    sptr = None
+    if parent is not None and supernodal != "off" and n:
+        sptr = _supernode_partition(parent, counts, SN_MAX_W)
+        if want_pairs:
+            Ri2, Rj2 = _amalgamate_pairs(n, Ri, Rj, parent, Li, Lptr, sptr)
+            if Ri2 is not Ri:
+                Ri, Rj = Ri2, Rj2
+                corder = np.lexsort((Ri, Rj))
+                Li = Ri[corder]
+                counts = np.bincount(Rj, minlength=n).astype(np.int64)
+                Lptr = np.concatenate([[0], np.cumsum(counts)])
+            sptr = _supernode_partition(parent, counts, SN_MAX_W)
     nnzL = int(Lptr[-1])
     nnzF = n + 2 * nnzL
     lkeys = Rj[corder] * np.int64(n) + Li      # sorted: position lookup in L
@@ -777,14 +1157,23 @@ def _symbolic_factor(row, col, n: int, ordering: str,
     col_sweep = _emit_sweep(n, nnzL, Ljc, Li, level, n_levels,
                             descending=True)
 
+    snode = None
+    if sptr is not None:
+        snode = _emit_snode(n, nnzL, Li, Lptr, Ljc, counts, lkeys, sptr,
+                            want_pairs, supernodal)
+
     stats = {"nnz_L": nnzL, "n_levels": n_levels, "flops": kept_updates,
              "fill_ratio": float(nnzF) / float(max(len(row), 1)),
-             "n_steps": fS, "ordering": ordering, "incomplete": incomplete}
+             "n_steps": fS, "ordering": ordering, "incomplete": incomplete,
+             "supernodal": snode is not None}
+    if snode is not None:
+        stats.update(snode.stats)
     return DirectArtifacts(
         n=n, nnzF=nnzF,
         perm=jnp.asarray(perm, jnp.int32), ipos=jnp.asarray(ipos, jnp.int32),
         a2f=jnp.asarray(a2f, jnp.int32),
-        factor=factor, row_sweep=row_sweep, col_sweep=col_sweep, stats=stats)
+        factor=factor, row_sweep=row_sweep, col_sweep=col_sweep, stats=stats,
+        snode=snode)
 
 
 # ---------------------------------------------------------------------------
@@ -863,6 +1252,193 @@ def schwarz_numeric(sch: SchwarzArtifacts, flat_val: jax.Array) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# supernodal numeric drivers (per-bucket compiled panel kernels)
+# ---------------------------------------------------------------------------
+
+def _sn_use_pallas() -> bool:
+    """Pallas panel kernels on compiled backends; jnp oracles on CPU (the
+    same routing as the fused solver steps — interpret-mode emulation would
+    serialize the panel loops)."""
+    from ..kernels.solve_step import default_interpret
+    return not default_interpret()
+
+
+@functools.lru_cache(maxsize=256)
+def _sn_factor_fn(wb: int, rb: int, pairs: bool, guard: bool,
+                  use_pallas: bool):
+    """One compiled factorize step for a bucket shape: gather panels, dense
+    panel factorization, scatter back, Schur GEMM, extend-add.  Cached per
+    padded shape — pow2 bucketing keeps the number of distinct compilations
+    logarithmic in problem size."""
+    from ..kernels import ref as _kref
+    from ..kernels import supernode as _ksn
+
+    @jax.jit
+    def fn(C, tau, pidx, qidx, uidx, wvec, rvec, bkm):
+        P = C[pidx]
+        Q = C[qidx]
+        if use_pallas:
+            P, Q, nbad = _ksn.panel_factor(P, Q, wvec, rvec, tau, bkm,
+                                           pairs=pairs, guard=guard)
+            S = _ksn.schur_update(P, Q)
+        else:
+            P, Q, nbad = _kref.sn_panel_factor_ref(P, Q, wvec, rvec, tau,
+                                                   bkm, pairs=pairs,
+                                                   guard=guard)
+            S = _kref.sn_schur_ref(P, Q)
+        # pad slots all point at the scratch sink; colliding pad writes are
+        # masked zeros/ones and every later gather re-masks, so the sink's
+        # value is never observed
+        C = C.at[pidx].set(P)
+        C = C.at[qidx].set(Q)
+        C = C.at[uidx].add(-S)
+        return C, nbad
+
+    return fn
+
+
+@functools.lru_cache(maxsize=512)
+def _sn_sweep_fn(wb: int, rb: int, pairs: bool, mode: str, use_pallas: bool):
+    """One compiled triangular-sweep step for a bucket shape.
+
+    ``mode``: ``"l"`` forward unit-L (block trsv + L-panel GEMV scatter),
+    ``"u"`` backward U (U-panel GEMV gather + block trsv with pivots),
+    ``"ut"``/``"lt"`` the transposed mirrors on the same factors.  The
+    solution vector carries a scratch element at index n; every write to it
+    is a masked zero, so pad gathers always read 0.
+    """
+    from ..kernels import ref as _kref
+    from ..kernels import supernode as _ksn
+
+    def trsv(D, yb, wvec, bkm):
+        if use_pallas:
+            return _ksn.block_trsv(D, yb, wvec, bkm, mode=mode, pairs=pairs)
+        return _kref.sn_trsv_ref(D, yb, wvec, bkm, mode=mode, pairs=pairs)
+
+    @jax.jit
+    def fn(C, y, pidx, qidx, rows, wvec, rvec, bkm):
+        tw = jnp.arange(wb)[None, :] < wvec[:, None]
+        ta = jnp.arange(rb)[None, :] < rvec[:, None]
+        D = C[pidx[:, :wb, :]]
+        rb_rows = rows[:, wb:]
+        wb_rows = rows[:, :wb]
+        if mode in ("l", "lt"):
+            Pp = jnp.where(ta[:, :, None] & tw[:, None, :],
+                           C[pidx[:, wb:, :]], 0.0)
+        else:
+            Qm = jnp.where(tw[:, :, None] & ta[:, None, :], C[qidx], 0.0)
+        if mode == "l":
+            yb = trsv(D, y[wb_rows], wvec, bkm)
+            upd = jnp.einsum("kaw,kw->ka", Pp, yb)
+            y = y.at[wb_rows].set(jnp.where(tw, yb, 0.0))
+            return y.at[rb_rows].add(-upd)
+        if mode == "u":
+            xb0 = y[wb_rows] - jnp.einsum("ktr,kr->kt", Qm, y[rb_rows])
+            xb = trsv(D, xb0, wvec, bkm)
+            return y.at[wb_rows].set(jnp.where(tw, xb, 0.0))
+        if mode == "ut":
+            yb = trsv(D, y[wb_rows], wvec, bkm)
+            upd = jnp.einsum("ktr,kt->kr", Qm, yb)
+            y = y.at[wb_rows].set(jnp.where(tw, yb, 0.0))
+            return y.at[rb_rows].add(-upd)
+        # mode == "lt"
+        xb0 = y[wb_rows] - jnp.einsum("kaw,ka->kw", Pp, y[rb_rows])
+        xb = trsv(D, xb0, wvec, bkm)
+        return y.at[wb_rows].set(jnp.where(tw, xb, 0.0))
+
+    return fn
+
+
+def _pow2_pad(x: jax.Array) -> jax.Array:
+    """Pad a 1-D array with zeros to the next power-of-two length.
+
+    The per-bucket jits specialize on every argument shape, so without this
+    each distinct pattern (distinct nnzF / n) would recompile every bucket
+    program it touches; padding collapses the storage lengths to log-many
+    values and the compiled executables are shared across patterns.  All
+    panel/sweep indices point below the original length, so the pad region
+    is never read or written.
+    """
+    m = x.shape[0]
+    mp = 1 << max(int(m - 1).bit_length(), 0)
+    if mp > m:
+        x = jnp.concatenate([x, jnp.zeros((mp - m,), x.dtype)])
+    return x
+
+
+def _snode_numeric(art: DirectArtifacts, C: jax.Array, tau: jax.Array,
+                   guard: bool) -> Tuple[jax.Array, jax.Array]:
+    """Run the supernodal factorization schedule over the assembled C."""
+    sn = art.snode
+    use_pallas = _sn_use_pallas()
+    nbad = jnp.zeros((), C.dtype)
+    m = C.shape[0]
+    C = _pow2_pad(C)
+    for lvl in sn.schedule:
+        for bk in lvl:
+            fn = _sn_factor_fn(bk.wb, bk.rb, bk.pairs, bool(guard),
+                               use_pallas)
+            C, nb = fn(C, tau, bk.pidx, bk.qidx, bk.uidx, bk.wvec, bk.rvec,
+                       bk.bkm)
+            nbad = nbad + nb
+    return C[:m], nbad
+
+
+def _snode_solve(art: DirectArtifacts, C: jax.Array, b: jax.Array,
+                 transposed: bool) -> jax.Array:
+    """Supernodal triangular sweeps (forward or transposed) on the panel
+    factors — ascending levels for L/Uᵀ, descending for U/Lᵀ."""
+    sn = art.snode
+    use_pallas = _sn_use_pallas()
+    # pow2-pad both operands so the sweep programs are shared across
+    # patterns (see _pow2_pad); sweep indices never touch the pad regions
+    C = _pow2_pad(C)
+    y = _pow2_pad(jnp.concatenate([b[art.perm], jnp.zeros((1,), b.dtype)]))
+
+    def run(y, levels, mode):
+        for lvl in levels:
+            for bk in lvl:
+                fn = _sn_sweep_fn(bk.wb, bk.rb, bk.pairs, mode, use_pallas)
+                y = fn(C, y, bk.pidx, bk.qidx, bk.rows, bk.wvec, bk.rvec,
+                       bk.bkm)
+        return y
+
+    if transposed:
+        y = run(y, sn.schedule, "ut")
+        y = run(y, tuple(reversed(sn.schedule)), "lt")
+    else:
+        y = run(y, sn.schedule, "l")
+        y = run(y, tuple(reversed(sn.schedule)), "u")
+    return y[art.ipos]
+
+
+def factor_slogdet(art: DirectArtifacts, C: jax.Array
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """(sign, log|det A|) from the factors — pivot-block aware.
+
+    The scalar path's determinant is the pivot product.  With static
+    Bunch–Kaufman pairs a 2x2 block contributes ``a·e − b·c`` (its raw
+    entries live in the pivot slots and the pair's b/c slots), NOT
+    ``a·e`` — ``sparse_slogdet`` routes through here so indefinite factors
+    report the correct sign.
+    """
+    n = art.n
+    piv = C[:n]
+    sn = art.snode
+    if sn is None or sn.pair_cols.shape[0] == 0:
+        return jnp.prod(jnp.sign(piv)), jnp.sum(jnp.log(jnp.abs(piv)))
+    unp = sn.unpaired
+    d = jnp.where(unp, piv, 1.0)
+    sign = jnp.prod(jnp.sign(d))
+    logabs = jnp.sum(jnp.where(unp, jnp.log(jnp.abs(d)), 0.0))
+    a = piv[sn.pair_cols[:, 0]]
+    e = piv[sn.pair_cols[:, 1]]
+    det = a * e - C[sn.pair_off[:, 0]] * C[sn.pair_off[:, 1]]
+    return (sign * jnp.prod(jnp.sign(det)),
+            logabs + jnp.sum(jnp.log(jnp.abs(det))))
+
+
+# ---------------------------------------------------------------------------
 # numeric factorization (traced-safe — the setup stage)
 # ---------------------------------------------------------------------------
 
@@ -894,6 +1470,21 @@ def numeric_factor(art: DirectArtifacts, val: jax.Array, *,
         val.dtype)
     C = jnp.zeros(art.nnzF + 2, dtype=val.dtype)
     C = C.at[art.a2f].add(val).at[art.nnzF + 1].set(1.0)
+
+    if art.snode is not None:
+        C, nbad = _snode_numeric(art, C, tau, pivot_guard)
+        if (not isinstance(val, jax.core.Tracer)
+                and not isinstance(nbad, jax.core.Tracer)):
+            n_bad = int(nbad)
+            if n_bad:
+                import warnings
+                warnings.warn(
+                    f"numeric factorization hit {n_bad} numerically-zero "
+                    f"pivot(s); applied a scaled diagonal perturbation "
+                    f"(|d|<{float(tau):.2e} -> ±{float(tau):.2e}). The "
+                    f"factors solve a nearby matrix — consider an iterative "
+                    f"backend or a symmetric shift for indefinite systems.")
+        return C
 
     if not pivot_guard:
         def step(C, xs):
@@ -981,7 +1572,13 @@ def factored_solve(art: DirectArtifacts, C: jax.Array, b: jax.Array,
     Forward: permute, unit-L then U sweeps, unpermute.  Transposed: the SAME
     factors with Uᵀ then Lᵀ sweeps — this is the adjoint's zero-refactorize
     path (LDLᵀ is self-adjoint; LU mirrors the sweeps).
+
+    Supernodal factors (``art.snode``) route through the blocked panel
+    sweeps instead of the scalar packed scan; same permutations, same
+    storage, same answer.
     """
+    if art.snode is not None:
+        return _snode_solve(art, C, b, transposed)
     c = b[art.perm]
     if transposed:
         w = _sweep(art, C, c, art.row_sweep, use_upos=True, divide=True)

@@ -402,6 +402,9 @@ class Backend:
 class DenseBackend(Backend):
     name = "dense"
     methods = ("lu", "cholesky")
+    # setup is just the (vmappable) densification — memoizing it makes a
+    # stacked-values batch densify once per stack instead of once per solve
+    cache_setup = True
 
     def applicable(self, A):
         return A.shape[0] == A.shape[1]
@@ -448,9 +451,14 @@ class DirectBackend(Backend):
         if cfg.method == "ldlt" and not pattern.props.get("symmetric", False):
             raise ValueError(
                 "method='ldlt' needs symmetric values; use method='lu'")
-        art = _direct.symbolic_factor(np.asarray(pattern.row),
-                                      np.asarray(pattern.col),
-                                      pattern.shape[0])
+        art = _direct.symbolic_factor(
+            np.asarray(pattern.row), np.asarray(pattern.col),
+            pattern.shape[0],
+            # indefinite-hinted systems get static Bunch–Kaufman 2x2 pivot
+            # blocks (chosen at analyze time) instead of relying on the
+            # zero-pivot perturbation stopgap at factor time
+            pivot_blocks=("auto" if pattern.props.get("indefinite_hint")
+                          else None))
         return {"direct": art, "transposed": False}
 
     def setup(self, plan, A):

@@ -42,12 +42,23 @@ class Options:
         the kernels compile (TPU/GPU) and keeps plain XLA loops in interpret
         mode (CPU); ``"on"``/``"off"`` force either path.  Read at
         solve-trace time, never frozen into a plan.
+    supernodal
+        Supernodal (dense-panel) direct factorization: ``"auto"`` emits the
+        panel program when the analyze-stage partition says it pays off
+        (mean supernode width and schedule size heuristics) or when static
+        Bunch–Kaufman pivot pairs were requested; ``"on"``/``"off"`` force
+        either path (``"off"`` keeps the scalar packed-scan program — the
+        A/B baseline).  Read at analyze time by
+        :func:`repro.core.direct.symbolic_factor`.
     dense_budget
         Auto-dispatch crossover: systems with ``n <= dense_budget`` take the
         dense MXU direct path.
     direct_budget
         Auto-dispatch crossover to the sparse-direct backend (cached symbolic
-        factorization); ``props["illcond_hint"]`` widens it 4x.
+        factorization); ``props["illcond_hint"]`` widens it 4x.  Raised to
+        10⁵ by the supernodal panel kernels (the numeric refactorization is
+        no longer the bottleneck; the one-time symbolic analysis amortizes
+        across the plan's lifetime).
     bell_min_fill
         Minimum block-ELL fill (nnz over padded slot capacity) for the
         analyze-time kernel plan to adopt the BELL layout on its own.
@@ -59,8 +70,9 @@ class Options:
         ``None`` means entry-count-only bounding.
     """
     fused_step: str = "auto"
+    supernodal: str = "auto"
     dense_budget: int = 4096
-    direct_budget: int = 24576
+    direct_budget: int = 100_000
     bell_min_fill: float = 1.0 / 64.0
     plan_cache_cap: int = 32
     plan_cache_bytes: Optional[int] = None
@@ -69,6 +81,9 @@ class Options:
         if self.fused_step not in ("auto", "on", "off"):
             raise ValueError(
                 f"fused_step must be 'auto'|'on'|'off', got {self.fused_step!r}")
+        if self.supernodal not in ("auto", "on", "off"):
+            raise ValueError(
+                f"supernodal must be 'auto'|'on'|'off', got {self.supernodal!r}")
         for name in ("dense_budget", "direct_budget"):
             v = getattr(self, name)
             if not isinstance(v, int) or v < 0:
@@ -109,7 +124,7 @@ def _parse_env(environ) -> dict:
             raise ValueError(
                 f"unknown option env var {key} (valid: "
                 + ", ".join(ENV_PREFIX + f.upper() for f in _FIELDS) + ")")
-        if name == "fused_step":
+        if name in ("fused_step", "supernodal"):
             out[name] = raw.strip().lower()
         elif name == "bell_min_fill":
             out[name] = float(raw)

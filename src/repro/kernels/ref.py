@@ -81,3 +81,231 @@ def bell_matvec_ref(bell_vals: jax.Array, block_cols: jax.Array,
     gathered = xb[block_cols]                        # (n_rb, k, bn)
     y = jnp.einsum("rkab,rkb->ra", bell_vals, gathered)
     return y.reshape(n_rb * bm)[:n]
+
+
+# ---------------------------------------------------------------------------
+# Supernodal panel kernels (kernels/supernode.py)
+#
+# The single-lane *_body functions below are the single source of truth for
+# the panel math: the oracles here vmap them over the bucket's lane axis, and
+# the Pallas kernels call the very same bodies on their per-lane VMEM blocks,
+# so kernel-vs-ref parity is structural rather than re-derived.
+#
+# Lane layout (one supernode of bucket shape (wb, rb), true size (w, r)):
+#   P (wb+rb, wb): rows 0..wb-1 the dense diagonal block D (strict lower = L,
+#       diagonal = pivots, strict upper = U), rows wb.. the sub-diagonal
+#       L panel over the supernode's row structure R_s;
+#   Q (wb, rb):    the U panel — rows of U over R_s.
+# Entries gathered from pad slots hold scratch garbage, so every body first
+# masks rows/columns beyond (w, r) to zero and plants a unit diagonal on pad
+# pivots, making pad lanes exact no-ops (unlike the scalar path, where pads
+# are element-wise no-ops by construction).
+# ---------------------------------------------------------------------------
+
+
+def sn_pair_det(a, b, c, e):
+    """Clamped determinant of a static Bunch–Kaufman 2x2 pivot E=[[a,b],[c,e]].
+
+    The floor is *locally* scaled (eps·max|E|² + tiny), computed identically
+    at factor and solve time from the same raw stored entries, so both sides
+    see the same (possibly clamped) determinant without persisting it."""
+    det = a * e - b * c
+    eps = jnp.finfo(det.dtype).eps
+    scale = jnp.maximum(jnp.maximum(jnp.abs(a), jnp.abs(e)),
+                        jnp.maximum(jnp.abs(b), jnp.abs(c)))
+    floor = eps * scale * scale + jnp.finfo(det.dtype).tiny
+    bad = jnp.abs(det) < floor
+    detc = jnp.where(bad, jnp.where(det < 0, -floor, floor), det)
+    return detc, bad
+
+
+def sn_panel_mask(P, Q, w, r):
+    """Zero pad rows/cols of a gathered (P, Q) lane; unit pad diagonal."""
+    m, wb = P.shape
+    rb = Q.shape[1]
+    ri = jnp.arange(m)[:, None]
+    cj = jnp.arange(wb)[None, :]
+    tw = cj < w
+    row_ok = jnp.where(ri < wb, ri < w, (ri - wb) < r)
+    P = jnp.where(row_ok & tw, P, 0.0)
+    P = P + jnp.where((ri == cj) & (cj >= w), 1.0, 0.0)
+    Q = jnp.where((jnp.arange(wb)[:, None] < w)
+                  & (jnp.arange(rb)[None, :] < r), Q, 0.0)
+    return P, Q
+
+
+def sn_block_mask(D, w):
+    """Zero pad rows/cols of a gathered diagonal block; unit pad diagonal."""
+    wb = D.shape[0]
+    ri = jnp.arange(wb)[:, None]
+    cj = jnp.arange(wb)[None, :]
+    D = jnp.where((ri < w) & (cj < w), D, 0.0)
+    return D + jnp.where((ri == cj) & (ri >= w), 1.0, 0.0)
+
+
+def sn_panel_factor_body(P, Q, w, r, tau, bkm, *, pairs: bool, guard: bool):
+    """Dense right-looking factorization of one supernode panel.
+
+    Matches the scalar packed-scan semantics entry for entry: L columns are
+    divided by their pivot, U rows (including the diagonal block's strict
+    upper and the Q panel) stay raw, and clamped pivots persist into storage.
+    With ``pairs``, columns flagged in ``bkm`` start a static 2x2 pivot: the
+    pair is eliminated jointly through E⁻¹ and its four defining entries
+    (a, e on the diagonal, b above, c below) are stored raw — they are private
+    to the diagonal block, consumed only by block solves and slogdet.
+    Returns (P, Q, nbad) where nbad counts clamped 1x1 pivots / 2x2 dets.
+    """
+    m, wb = P.shape
+    P, Q = sn_panel_mask(P, Q, w, r)
+    one = jnp.ones((), P.dtype)
+    zero = jnp.zeros((), P.dtype)
+    false = jnp.zeros((), bool)
+    rows = jnp.arange(m)
+    cols = jnp.arange(wb)
+
+    def step(t, carry):
+        P, Q, nbad = carry
+        start = bkm[t] if pairs else false
+        second = (bkm[jnp.maximum(t - 1, 0)] & (t > 0)) if pairs else false
+        # -- 1x1 elimination (bypassed with a unit divisor on pair members,
+        #    so the discarded branch stays finite under AD) --
+        d = P[t, t]
+        if guard:
+            bad1 = jnp.abs(d) < tau
+            dc = jnp.where(bad1, jnp.where(d < 0, -tau, tau), d)
+        else:
+            bad1 = false
+            dc = d
+        deff = jnp.where(start | second, one, dc) if pairs else dc
+        colL = jnp.where(rows > t, P[:, t] / deff, 0.0)
+        urow = jnp.where(cols > t, P[t, :], 0.0)
+        P1 = P - colL[:, None] * urow[None, :]
+        P1 = P1.at[:, t].set(jnp.where(rows > t, colL, P[:, t]))
+        P1 = P1.at[t, t].set(dc)
+        Q1 = Q - colL[:wb, None] * Q[t, :][None, :]
+        if not pairs:
+            return P1, Q1, nbad + bad1.astype(P.dtype)
+        # -- 2x2 elimination for the pair (t, t+1); t1 is clamped so the
+        #    branch stays in-bounds when discarded at t = wb-1 --
+        t1 = jnp.minimum(t + 1, wb - 1)
+        a, b = P[t, t], P[t, t1]
+        c, e = P[t1, t], P[t1, t1]
+        detc, bad2 = sn_pair_det(a, b, c, e)
+        below2 = rows > t1
+        u = jnp.where(below2, P[:, t], 0.0)
+        v = jnp.where(below2, P[:, t1], 0.0)
+        lu = (u * e - v * c) / detc
+        lv = (v * a - u * b) / detc
+        urow1 = jnp.where(cols > t1, P[t, :], 0.0)
+        urow2 = jnp.where(cols > t1, P[t1, :], 0.0)
+        P2 = P - lu[:, None] * urow1[None, :] - lv[:, None] * urow2[None, :]
+        P2 = P2.at[:, t].set(jnp.where(below2, lu, P[:, t]))
+        P2 = P2.at[:, t1].set(jnp.where(below2, lv, P[:, t1]))
+        Q2 = (Q - lu[:wb, None] * Q[t, :][None, :]
+              - lv[:wb, None] * Q[t1, :][None, :])
+        Pn = jnp.where(start, P2, jnp.where(second, P, P1))
+        Qn = jnp.where(start, Q2, jnp.where(second, Q, Q1))
+        nbad = nbad + jnp.where(
+            start, bad2.astype(P.dtype),
+            jnp.where(second, zero, bad1.astype(P.dtype)))
+        return Pn, Qn, nbad
+
+    return jax.lax.fori_loop(0, wb, step, (P, Q, zero))
+
+
+def sn_trsv_body(D, y, w, bkm, *, mode: str, pairs: bool):
+    """Dense triangular solve on one supernode diagonal block.
+
+    Modes (all operate on the packed block: strict lower = unit-L, diagonal =
+    pivots, strict upper = U):
+
+    - ``"l"``:  unit-lower forward solve (L y = b);
+    - ``"lt"``: unit-upper backward solve (Lᵀ x = y);
+    - ``"u"``:  upper backward solve with pivot divides (U x = y);
+    - ``"ut"``: lower forward solve with pivot divides (Uᵀ y = b).
+
+    With ``pairs``, the stored subdiagonal c at a pair start is NOT an L entry
+    (the pair's L block is the identity): the unit-triangular modes mask it,
+    and the pivot modes solve the 2x2 system E / Eᵀ jointly.
+    """
+    wb = D.shape[0]
+    D = sn_block_mask(D, w)
+    idx = jnp.arange(wb)
+    x = jnp.where(idx < w, y, 0.0)
+    one = jnp.ones((), D.dtype)
+    false = jnp.zeros((), bool)
+    if pairs and mode in ("l", "lt"):
+        # pair-start subdiagonal holds raw c — identity in the unit factor
+        sub = (idx[:, None] == idx[None, :] + 1) & bkm[None, :]
+        D = jnp.where(sub, 0.0, D)
+    if mode == "l":
+        return jax.lax.fori_loop(
+            0, wb,
+            lambda t, x: x - jnp.where(idx > t, D[:, t], 0.0) * x[t], x)
+    if mode == "lt":
+        def lt_step(i, x):
+            t = wb - 1 - i
+            return x - jnp.where(idx < t, D[t, :], 0.0) * x[t]
+        return jax.lax.fori_loop(0, wb, lt_step, x)
+
+    def step(i, x):
+        t = (wb - 1 - i) if mode == "u" else i
+        start = bkm[t] if pairs else false
+        second = (bkm[jnp.maximum(t - 1, 0)] & (t > 0)) if pairs else false
+        dd = jnp.where(start | second, one, D[t, t]) if pairs else D[t, t]
+        xt1 = x[t] / dd
+        if mode == "u":
+            prop = jnp.where(idx < t, D[:, t], 0.0)       # U column above t
+        else:
+            prop = jnp.where(idx > t, D[t, :], 0.0)       # Uᵀ: U row past t
+        x1 = (x - prop * xt1).at[t].set(xt1)
+        if not pairs:
+            return x1
+        t1 = jnp.minimum(t + 1, wb - 1)
+        a, b = D[t, t], D[t, t1]
+        c, e = D[t1, t], D[t1, t1]
+        detc, _ = sn_pair_det(a, b, c, e)
+        rt, rt1 = x[t], x[t1]
+        if mode == "u":           # E [xt, xtt] = [rt, rt1]
+            xt = (e * rt - b * rt1) / detc
+            xtt = (a * rt1 - c * rt) / detc
+            p1 = jnp.where(idx < t, D[:, t], 0.0)
+            p2 = jnp.where(idx < t, D[:, t1], 0.0)
+        else:                     # Eᵀ [xt, xtt] = [rt, rt1]
+            xt = (e * rt - c * rt1) / detc
+            xtt = (a * rt1 - b * rt) / detc
+            p1 = jnp.where(idx > t1, D[t, :], 0.0)
+            p2 = jnp.where(idx > t1, D[t1, :], 0.0)
+        x2 = (x - p1 * xt - p2 * xtt).at[t].set(xt).at[t1].set(xtt)
+        return jnp.where(start, x2, jnp.where(second, x, x1))
+
+    return jax.lax.fori_loop(0, wb, step, x)
+
+
+def sn_panel_factor_ref(P, Q, wvec, rvec, tau, bkm, *, pairs=False,
+                        guard=True):
+    """Batched oracle: vmap of :func:`sn_panel_factor_body` over lanes.
+
+    Returns (P, Q, nbad_total)."""
+    fn = jax.vmap(
+        lambda p, q, w, r, m: sn_panel_factor_body(
+            p, q, w, r, tau, m, pairs=pairs, guard=guard))
+    P, Q, nbad = fn(P, Q, wvec, rvec, bkm)
+    return P, Q, jnp.sum(nbad)
+
+
+def sn_schur_ref(P, Q):
+    """Batched Schur-complement GEMM: S[l] = Lpanel[l] @ Upanel[l].
+
+    ``P`` (k, wb+rb, wb) masked/divided panels, ``Q`` (k, wb, rb) raw U rows;
+    returns (k, rb, rb) updates to scatter-subtract into the trailing slots.
+    """
+    wb = Q.shape[1]
+    return jnp.einsum("kiw,kwr->kir", P[:, wb:, :], Q)
+
+
+def sn_trsv_ref(D, y, wvec, bkm, *, mode, pairs=False):
+    """Batched oracle: vmap of :func:`sn_trsv_body` over lanes."""
+    return jax.vmap(
+        lambda d, yy, w, m: sn_trsv_body(d, yy, w, m, mode=mode,
+                                         pairs=pairs))(D, y, wvec, bkm)

@@ -1,0 +1,173 @@
+"""Pallas TPU kernels: supernodal panel factorize / triangular solve.
+
+The supernodal direct path (``core/direct.py``) groups columns into
+fundamental supernodes and buckets them by padded panel shape; each bucket is
+a batch of identically-shaped dense panels gathered from the packed factor
+vector.  The kernels here run one supernode per grid lane:
+
+- :func:`panel_factor` — right-looking dense factorization of the
+  (wb+rb, wb) panel (diagonal-block elimination + L-panel divide + trailing
+  update), including the static Bunch–Kaufman 2x2 pivot pairs;
+- :func:`schur_update` — the extend-add GEMM ``S = Lpanel @ Upanel`` whose
+  result is scatter-subtracted into ancestor slots (the MXU-bound step that
+  replaces O(w·r²) scalar packed-scan multiply-adds);
+- :func:`block_trsv` — dense triangular solves on the diagonal block for the
+  four sweep modes (L, Lᵀ, U, Uᵀ).
+
+Each kernel's math lives in a single-lane ``sn_*_body`` function in
+``kernels/ref.py`` — the pure-jnp oracles vmap those bodies, and the Pallas
+kernels call the very same bodies on their per-lane VMEM blocks, so
+kernel-vs-ref parity is structural.  Per-lane true sizes (w, r) ride in SMEM;
+pad rows/columns are masked inside the body (gathered pads hold scratch
+garbage).  Every kernel declares its traffic model via a
+``passes = (reads, writes)`` attribute in units of full operand arrays.
+
+On CPU the direct driver calls the jnp oracles directly (interpret-mode
+Pallas emulation would serialize the python loop); the kernels are still
+exercised under ``interpret=True`` by the parity tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from . import ref as _ref
+from .solve_step import default_interpret
+
+__all__ = ["panel_factor", "schur_update", "block_trsv", "default_interpret"]
+
+
+def _scalar_spec():
+    return pl.BlockSpec((1, 1), lambda i: (i, 0), memory_space=pltpu.SMEM)
+
+
+def panel_factor(P, Q, wvec, rvec, tau, bkm, *, pairs=False, guard=True,
+                 interpret=None):
+    """Factorize a bucket of supernode panels in place.
+
+    ``P`` (k, wb+rb, wb) gathered [D-block; L-panel] columns, ``Q``
+    (k, wb, rb) gathered U-panel rows, ``wvec``/``rvec`` (k,) true
+    width/sub-row counts, ``tau`` the 1x1 pivot clamp, ``bkm`` (k, wb) bool
+    pair-start flags.  Returns (P, Q, nbad) with L divided, U raw, clamped
+    pivots persisted — bit-identical storage semantics to the scalar path.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    k, m, wb = P.shape
+    rb = Q.shape[2]
+    dtype = P.dtype
+
+    def kern(wv, rv, tv, bk, p, q, po, qo, nb):
+        w = wv[0, 0]
+        r = rv[0, 0]
+        t = tv[0, 0]
+        mask = bk[0] != 0
+        Pn, Qn, bad = _ref.sn_panel_factor_body(
+            p[0], q[0], w, r, t, mask, pairs=pairs, guard=guard)
+        po[0] = Pn
+        qo[0] = Qn
+        nb[0, 0] = bad
+
+    Po, Qo, nbad = pl.pallas_call(
+        kern,
+        grid=(k,),
+        in_specs=[
+            _scalar_spec(), _scalar_spec(),
+            pl.BlockSpec((1, 1), lambda i: (0, 0), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, wb), lambda i: (i, 0)),
+            pl.BlockSpec((1, m, wb), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, wb, rb), lambda i: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, m, wb), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, wb, rb), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0), memory_space=pltpu.SMEM),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k, m, wb), dtype),
+            jax.ShapeDtypeStruct((k, wb, rb), dtype),
+            jax.ShapeDtypeStruct((k, 1), dtype),
+        ],
+        interpret=interpret,
+    )(wvec.reshape(k, 1).astype(jnp.int32),
+      rvec.reshape(k, 1).astype(jnp.int32),
+      jnp.asarray(tau, dtype).reshape(1, 1),
+      bkm.astype(dtype),
+      P, Q)
+    return Po, Qo, jnp.sum(nbad)
+
+
+panel_factor.passes = (2, 2)
+
+
+def schur_update(P, Q, *, interpret=None):
+    """Extend-add GEMM: S[l] = Lpanel[l] @ Upanel[l] per lane on the MXU.
+
+    ``P`` (k, wb+rb, wb) factored panels (rows wb.. hold divided L),
+    ``Q`` (k, wb, rb) raw U rows.  Returns S (k, rb, rb); the driver
+    scatter-subtracts it into the ancestors' packed slots (extend-add).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    k, m, wb = P.shape
+    rb = Q.shape[2]
+    dtype = P.dtype
+
+    def kern(p, q, s):
+        s[0] = jax.lax.dot_general(
+            p[0][wb:, :], q[0], (((1,), (0,)), ((), ())),
+            preferred_element_type=dtype)
+
+    return pl.pallas_call(
+        kern,
+        grid=(k,),
+        in_specs=[
+            pl.BlockSpec((1, m, wb), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, wb, rb), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, rb, rb), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, rb, rb), dtype),
+        interpret=interpret,
+    )(P, Q)
+
+
+schur_update.passes = (2, 1)
+
+
+def block_trsv(D, y, wvec, bkm, *, mode, pairs=False, interpret=None):
+    """Dense triangular solve on a bucket of diagonal blocks.
+
+    ``D`` (k, wb, wb) packed blocks (strict lower = unit-L, diagonal =
+    pivots, strict upper = U), ``y`` (k, wb) right-hand sides, ``mode`` one
+    of ``"l"``/``"lt"``/``"u"``/``"ut"`` (see ``ref.sn_trsv_body``).
+    Returns x (k, wb).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    k, wb = y.shape
+    dtype = D.dtype
+
+    def kern(wv, bk, d, yy, xo):
+        w = wv[0, 0]
+        mask = bk[0] != 0
+        xo[0] = _ref.sn_trsv_body(d[0], yy[0], w, mask, mode=mode,
+                                  pairs=pairs)
+
+    return pl.pallas_call(
+        kern,
+        grid=(k,),
+        in_specs=[
+            _scalar_spec(),
+            pl.BlockSpec((1, wb), lambda i: (i, 0)),
+            pl.BlockSpec((1, wb, wb), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, wb), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, wb), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, wb), dtype),
+        interpret=interpret,
+    )(wvec.reshape(k, 1).astype(jnp.int32), bkm.astype(dtype), D, y)
+
+
+block_trsv.passes = (2, 1)

@@ -243,9 +243,9 @@ def test_multirhs_single_factorization(A):
 def test_auto_prefers_direct_midsize_and_illcond():
     mid = poisson2d(80)     # 6400: above DENSE_BUDGET, below DIRECT_BUDGET
     assert dispatch.select_backend(mid, "auto", "auto") == ("direct", "ldlt")
-    mid2 = poisson2d(150)   # 22500: inside the RAISED budget (was > old 8192)
+    mid2 = poisson2d(250)   # 62500: inside the RAISED 10⁵ budget (was 24576)
     assert dispatch.select_backend(mid2, "auto", "auto") == ("direct", "ldlt")
-    big = poisson2d(160)    # 25600 > DIRECT_BUDGET → iterative
+    big = poisson2d(320)    # 102400 > DIRECT_BUDGET → iterative
     assert dispatch.select_backend(big, "auto", "auto") == ("jnp", "cg")
     big.props["illcond_hint"] = True
     assert dispatch.select_backend(big, "auto", "auto") == ("direct", "ldlt")

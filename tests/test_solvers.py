@@ -75,8 +75,8 @@ def test_auto_dispatch_policy(A2d):
     b2, m2 = select_backend(mid, "auto", "auto")
     assert (b2, m2) == ("direct", "ldlt")
     # large → iterative cg (symmetric)
-    big = poisson2d(160)   # 25600 > DIRECT_BUDGET (raised to 24576 with the
-    b3, m3 = select_backend(big, "auto", "auto")   # AMD+etree symbolic pass)
+    big = poisson2d(320)   # 102400 > DIRECT_BUDGET (raised to 10⁵ with the
+    b3, m3 = select_backend(big, "auto", "auto")   # supernodal panel kernels)
     assert (b3, m3) == ("jnp", "cg")
     # ... unless the caller hints ill-conditioning (Krylov stalls there)
     big.props["illcond_hint"] = True
