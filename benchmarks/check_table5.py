@@ -1,0 +1,91 @@
+"""Bench-smoke gate over the table5 artifact (CI goes red on regression).
+
+    PYTHONPATH=src python -m benchmarks.check_table5 BENCH_table5.json
+
+Asserts the PR-10 gradcheck claims hold on every run:
+
+- every gradcheck row's ``rel_err`` (AD vs central FD, or AD vs the dense
+  unrolled-Newton reference) stays under ``MAX_REL_ERR``;
+- both SparseNewton rows (``direct`` and ``amg`` inner solvers) are present
+  with ``analyze == 1`` and ``transpose_shared == 1`` — one symbolic
+  analysis serves the whole Newton sweep plus its IFT backward — and the
+  per-step numeric refresh count equals the step count, never more;
+- both preconditioned eigen rows are present (including ``largest``); the
+  ``smallest`` row analyzes the pattern exactly once and the ``largest``
+  row — same tensor, later in the run — shows ``analyze == 0`` (the cached
+  plan served it); the smallest-pair row's eigenvector-cotangent check
+  (``vec_rel_err``) also clears the gate.
+"""
+import json
+import sys
+
+MAX_REL_ERR = 1e-5
+
+REQUIRED = (
+    "table5/eigenvalue_k6",
+    "table5/nonlinear_newton",
+    "table5/nonlinear_sparse_newton_direct",
+    "table5/nonlinear_sparse_newton_amg",
+    "table5/eigen_amg_smallest",
+    "table5/eigen_amg_largest",
+)
+
+
+def _derived(row):
+    return dict(kv.split("=", 1) for kv in row["derived"].split(";")
+                if "=" in kv)
+
+
+def check(path: str) -> None:
+    with open(path) as f:
+        data = json.load(f)
+    by_name = {r["name"]: r for r in data["rows"]}
+
+    missing = [n for n in REQUIRED if n not in by_name]
+    if missing:
+        raise SystemExit(f"check_table5: missing rows {missing}")
+
+    for name in REQUIRED:
+        d = _derived(by_name[name])
+        rel = float(d.get("rel_err", "inf"))
+        if not rel < MAX_REL_ERR:
+            raise SystemExit(f"check_table5: {name} rel_err {rel:.1e} >= "
+                             f"{MAX_REL_ERR:.0e}")
+        print(f"check_table5: {name} rel_err={rel:.1e} ok")
+
+    for tag in ("direct", "amg"):
+        d = _derived(by_name[f"table5/nonlinear_sparse_newton_{tag}"])
+        if d.get("analyze") != "1" or d.get("transpose_shared") != "1":
+            raise SystemExit(
+                f"check_table5: sparse_newton_{tag} plan counters regressed "
+                f"(analyze={d.get('analyze')}, "
+                f"transpose_shared={d.get('transpose_shared')}; expected 1/1 "
+                f"across the Newton sweep AND the IFT backward)")
+        if d.get("refresh") != d.get("steps"):
+            raise SystemExit(
+                f"check_table5: sparse_newton_{tag} refreshed "
+                f"{d.get('refresh')} times for {d.get('steps')} Newton steps "
+                f"— the setup memo should make these equal")
+        print(f"check_table5: sparse_newton_{tag} counters ok "
+              f"(analyze=1, transpose_shared=1, "
+              f"refresh=steps={d.get('steps')})")
+
+    # the two eigen rows share one tensor: smallest analyzes the pattern,
+    # largest must hit the cached plan (analyze == 0) — both counts regress
+    # if the eigsh path stops routing through the plan engine
+    for tag, want in (("smallest", "1"), ("largest", "0")):
+        d = _derived(by_name[f"table5/eigen_amg_{tag}"])
+        if d.get("analyze") != want:
+            raise SystemExit(f"check_table5: eigen_amg_{tag} analyze="
+                             f"{d.get('analyze')}, expected {want}")
+    d = _derived(by_name["table5/eigen_amg_smallest"])
+    vec = float(d.get("vec_rel_err", "inf"))
+    if not vec < MAX_REL_ERR:
+        raise SystemExit(f"check_table5: eigen_amg_smallest vec_rel_err "
+                         f"{vec:.1e} >= {MAX_REL_ERR:.0e}")
+    print(f"check_table5: eigen rows ok (analyze=1 then cached, "
+          f"vec_rel_err={vec:.1e})")
+
+
+if __name__ == "__main__":
+    check(sys.argv[1] if len(sys.argv) > 1 else "BENCH_table5.json")

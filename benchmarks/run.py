@@ -54,7 +54,8 @@ def main() -> None:
         suites.append(("fig2", fig2_adjoint_vs_naive.run))
     if only is None or "table5" in only:
         from . import table5_gradcheck
-        suites.append(("table5", table5_gradcheck.run))
+        suites.append(("table5", lambda: table5_gradcheck.run(
+            args.full, smoke=args.smoke)))
     if only is None or "fig3" in only:
         from . import fig3_inverse
         steps = 1500 if args.full else 300

@@ -1,12 +1,27 @@
 """Paper Table 5: gradient verification for nonlinear and eigenvalue paths
 vs central finite differences, with forward/backward cost in units of
 forward operations (nonlinear: N Newton solves fwd → 1 adjoint solve bwd;
-eigen: 1 LOBPCG fwd → outer product bwd)."""
+eigen: 1 LOBPCG fwd → outer product bwd).
+
+PR 10 adds the plan-engine rows, gated in CI by ``check_table5.py``:
+
+* ``nonlinear_sparse_newton_{direct,amg}`` — SparseNewton IFT θ-gradients vs
+  dense autodiff through an unrolled Newton loop, with the plan counters
+  (``analyze``/``transpose_shared``/``factorize`` or ``galerkin``) recorded
+  in the derived column so CI catches a re-analysis regression, not just a
+  wrong number;
+* ``eigen_amg_{smallest,largest}`` — ``sparse_eigsh`` with ``precond="amg"``
+  routed through the same plan engine; eigenvalue gradients vs central FD
+  (per-entry FD breaks COO symmetry, so the smallest-pair row additionally
+  checks the eigenvector cotangent path against the unpreconditioned AD
+  gradient).
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import SparseTensor, nonlinear_solve
+from repro.core import SparseTensor, nonlinear_solve, sparse_eigsh
+from repro.core.dispatch import PLAN_STATS, SolverConfig, reset_plan_stats
 from repro.data.poisson import poisson1d, poisson2d
 
 from .common import csv_row
@@ -21,7 +36,13 @@ def _aniso(ng, cy=0.3679):
     return SparseTensor(val, row, col, A.shape)
 
 
-def run():
+def _fresh(A):
+    """Same matrix, fresh plan cache — keeps PLAN_STATS attributable."""
+    return SparseTensor(A.val, A.row, A.col, A.shape, props=dict(A.props),
+                        validate=False)
+
+
+def run(full: bool = False, smoke: bool = False):
     rows = []
     eps = 1e-5
     rng = np.random.default_rng(0)
@@ -52,8 +73,6 @@ def run():
     def residual(u, val, ff):
         return An.with_values(val) @ u + u ** 3 - ff
 
-    newton_iters = []
-
     def nl_loss(val, ff):
         u = nonlinear_solve(residual, jnp.zeros(n), val, ff,
                             method="newton", tol=1e-13)
@@ -72,6 +91,92 @@ def run():
     rows.append(csv_row("table5/nonlinear_newton", 0.0,
                         f"rel_err={max(errs):.2e};"
                         f"fwd={int(info.iters)} solves;bwd=1 solve"))
+
+    # ---- SparseNewton IFT through the plan engine (PR 10) ----
+    ng = 16 if full else (8 if smoke else 12)
+    B = _aniso(ng)
+    nB = B.shape[0]
+    fB = jnp.linspace(0.5, 1.5, nB)
+
+    def residualB(u, th):
+        return B @ u + th * u ** 3 - fB
+
+    def dense_unrolled(th):
+        u = jnp.zeros(nB)
+        for _ in range(25):
+            F = residualB(u, th)
+            J = jax.jacfwd(lambda uu: residualB(uu, th))(u)
+            u = u - jnp.linalg.solve(J, F)
+        return jnp.sum(u ** 2)
+
+    th0 = jnp.asarray(0.7)
+    g_ref = float(jax.grad(dense_unrolled)(th0))
+
+    for tag, cfg in (("direct", SolverConfig(backend="direct")),
+                     ("amg", SolverConfig(backend="jnp", method="cg",
+                                          precond="amg", tol=1e-13,
+                                          maxiter=800))):
+        Bf = _fresh(B)
+
+        def sn_loss(th):
+            u = nonlinear_solve(lambda u, t: Bf @ u + t * u ** 3 - fB,
+                                jnp.zeros(nB), th, jac_pattern=Bf,
+                                linear_solver=cfg, tol=1e-13)
+            return jnp.sum(u ** 2)
+
+        reset_plan_stats()
+        g = float(jax.grad(sn_loss)(th0))
+        rel = abs(g - g_ref) / max(abs(g_ref), 1e-12)
+        steps = PLAN_STATS["jac_assemble"]
+        refresh = PLAN_STATS["factorize"] if tag == "direct" \
+            else PLAN_STATS["galerkin"]
+        rows.append(csv_row(
+            f"table5/nonlinear_sparse_newton_{tag}", 0.0,
+            f"rel_err={rel:.2e};n={nB};analyze={PLAN_STATS['analyze']};"
+            f"transpose_shared={PLAN_STATS['transpose_shared']};"
+            f"steps={steps};refresh={refresh};"
+            f"fwd={steps} solves;bwd=1 solve"))
+
+    # ---- eigenpairs with precond="amg" through the plan engine (PR 10) ----
+    C = _aniso(16 if full else (8 if smoke else 12))
+
+    def eig_amg_loss(val, largest):
+        w, _ = sparse_eigsh(C.with_values(val), k=3, precond="amg",
+                            largest=largest, tol=1e-12, maxiter=3000,
+                            compute_vector_grads=False)
+        return jnp.sum(w * jnp.arange(1.0, 4.0))
+
+    for tag, largest in (("smallest", False), ("largest", True)):
+        reset_plan_stats()
+        g = jax.grad(lambda v: eig_amg_loss(v, largest))(C.val)
+        analyze = PLAN_STATS["analyze"]
+        errs = []
+        for e in rng.choice(C.nnz, 6, replace=False):
+            fd = (eig_amg_loss(C.val.at[e].add(eps), largest)
+                  - eig_amg_loss(C.val.at[e].add(-eps), largest)) / (2 * eps)
+            errs.append(abs(float(g[e]) - float(fd))
+                        / max(abs(float(fd)), 1e-12))
+        extra = ""
+        if not largest:
+            # eigenvector cotangents: preconditioned deflated CG vs the
+            # unpreconditioned AD reference (FD breaks COO symmetry)
+            a = jnp.asarray(rng.normal(size=C.shape[0]))
+
+            def vec_loss(val, precond):
+                w, V = sparse_eigsh(C.with_values(val), k=2, precond=precond,
+                                    tol=1e-13, maxiter=3000)
+                return 1.3 * w[0] + (V[1] @ a) ** 2
+
+            gv_pre = jax.grad(lambda v: vec_loss(v, "amg"))(C.val)
+            gv_ref = jax.grad(lambda v: vec_loss(v, None))(C.val)
+            vec_err = float(jnp.max(jnp.abs(gv_pre - gv_ref))
+                            / jnp.max(jnp.abs(gv_ref)))
+            extra = f";vec_rel_err={vec_err:.2e}"
+        rows.append(csv_row(
+            f"table5/eigen_amg_{tag}", 0.0,
+            f"rel_err={max(errs):.2e};n={C.shape[0]};analyze={analyze}"
+            f"{extra};fwd=1 LOBPCG;bwd=outer product"))
+
     return rows
 
 

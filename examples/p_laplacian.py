@@ -1,0 +1,97 @@
+"""Regularized p-Laplacian on an unstructured graph via SparseNewton.
+
+    PYTHONPATH=src python examples/p_laplacian.py
+
+The problem: find u with
+
+    F(u) = L u + θ φ(u) + γ u − f = 0,
+    φ(t) = (t² + ε)^((p−2)/2) · t                     (p > 2, ε > 0)
+
+on a random geometric graph — graph diffusion with a regularized p-type
+zero-order nonlinearity whose θ → 0 limit is the ordinary graph-Laplacian
+solve.  The Jacobian L + diag(θ φ′(u) + γ) changes values every Newton
+step but is symmetric positive definite with the mesh's sparsity: exactly
+the graph Laplacian pattern.  SparseNewton exploits that the way the
+linear plan engine does —
+
+* the pattern is colored ONCE (PLAN_STATS["jac_color"]); each step recovers
+  the exact Jacobian values with one vmapped jvp probe sweep
+  (PLAN_STATS["jac_assemble"]);
+* ONE analyzed plan (here CG + smoothed-aggregation AMG) serves every step:
+  PLAN_STATS["analyze"] == 1 across the whole sweep, the numeric Galerkin
+  refresh runs once per step through the setup memo;
+* the implicit-function-theorem backward solves Jᵀλ = g through
+  plan.transpose() on the converged step's hierarchy — zero extra
+  coarsening/refresh, and the θ-gradient costs ONE linear solve no matter
+  how many Newton steps the forward took.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+jax.config.update("jax_enable_x64", True)
+
+from repro import sla
+from repro.core import PLAN_STATS, reset_plan_stats
+from repro.core.dispatch import SolverConfig
+from repro.data.graphs import graph_laplacian
+
+# -- mesh: random geometric graph, n >= 10^4 --------------------------------
+n = 10_000
+L = graph_laplacian(n, seed=3)          # SPD graph Laplacian (+ small shift)
+print(f"mesh: n={n}, nnz={L.nnz} (~{L.nnz / n:.1f} per row)")
+
+p, eps_reg, gamma = 3.0, 1e-4, 1e-2
+f = jnp.asarray(np.random.default_rng(0).normal(size=n)) * 1e-2
+
+# Pointwise regularized p-term: F = L u + θ φ(u) + γ u − f with
+# φ(t) = (t² + ε)^((p−2)/2) t.  The Jacobian L + diag(θ φ′(u) + γ) is
+# symmetric positive definite (φ′ > 0) and lives EXACTLY on L's pattern —
+# that symmetry is what lets CG + AMG serve every Newton step.  (Putting
+# φ inside the divergence, L @ φ(u), would make J = L·diag(φ′)
+# nonsymmetric and CG inapplicable — use backend="direct" for that form.)
+def residual(u, theta):
+    return L @ u + theta * ((u ** 2 + eps_reg) ** ((p - 2) / 2)) * u \
+        + gamma * u - f
+
+
+# -- forward: Newton with AMG inner solves through ONE plan -----------------
+cfg = SolverConfig(backend="jnp", method="cg", precond="amg",
+                   tol=1e-12, maxiter=600)
+theta = jnp.asarray(1.0)
+
+reset_plan_stats()
+u = sla.nonlinear_solve(residual, jnp.zeros(n), theta,
+                        jac_pattern=L, linear_solver=cfg, tol=1e-10)
+print(f"forward: |F(u*)| = {float(jnp.linalg.norm(residual(u, theta))):.2e} "
+      f"after {PLAN_STATS['jac_assemble']} Newton steps")
+print(f"  analyze={PLAN_STATS['analyze']} (one symbolic AMG hierarchy)",
+      f"coarsen={PLAN_STATS['coarsen']}",
+      f"galerkin={PLAN_STATS['galerkin']} (numeric refresh per step)",
+      f"jac_color={PLAN_STATS['jac_color']}")
+
+# -- backward: IFT adjoint on the converged step's hierarchy ----------------
+# NOTE: no reset — the cached plan keeps serving; analyze stays 1 across
+# the forward above, the gradient below, AND the FD corroboration solves.
+
+
+def loss(theta):
+    u = sla.nonlinear_solve(residual, jnp.zeros(n), theta,
+                            jac_pattern=L, linear_solver=cfg, tol=1e-10)
+    return jnp.sum(u ** 2)
+
+
+g = jax.grad(loss)(theta)
+print(f"dloss/dθ = {float(g):+.6e}")
+print(f"  analyze={PLAN_STATS['analyze']} across forward AND backward,",
+      f"transpose_shared={PLAN_STATS['transpose_shared']} (Jᵀλ = g reused "
+      f"the forward plan),",
+      f"setup_reuse={PLAN_STATS['setup_reuse']} (the converged step's "
+      f"hierarchy served the adjoint)")
+
+# central FD corroboration (reuses the SAME cached plan — analyze stays 1)
+eps = 1e-4
+fd = (loss(theta + eps) - loss(theta - eps)) / (2 * eps)
+print(f"  vs central FD {float(fd):+.6e} "
+      f"(rel err {abs(float(g - fd)) / abs(float(fd)):.1e}, "
+      f"analyze still {PLAN_STATS['analyze']})")

@@ -9,6 +9,7 @@ Public API mirrors torch-sla:
 """
 from .sparse import SparseTensor, SparseTensorList, coo_matvec, build_bell
 from .adjoint import nonlinear_solve, sparse_solve, sparse_eigsh
+from .nonlinear import SparseNewton
 from .dispatch import (SolverConfig, SolverPlan, get_plan, make_config,
                        select_backend, register_backend, PLAN_STATS,
                        reset_plan_stats)
@@ -17,7 +18,7 @@ from . import solvers, precond
 __all__ = [
     "SparseTensor", "SparseTensorList", "coo_matvec", "build_bell",
     "DSparseTensor", "DSparseTensorList",
-    "nonlinear_solve", "sparse_solve", "sparse_eigsh",
+    "nonlinear_solve", "sparse_solve", "sparse_eigsh", "SparseNewton",
     "SolverConfig", "SolverPlan", "get_plan", "make_config",
     "select_backend", "register_backend", "PLAN_STATS", "reset_plan_stats",
     "solvers", "precond",

@@ -151,23 +151,58 @@ def nonlinear_solve(residual: Callable, x0: jax.Array, *theta,
                     method: str = "newton", tol: float = 1e-8,
                     maxiter: int = 50, inner_tol: float = 1e-10,
                     inner_maxiter: int = 1000, damping: float = 1.0,
-                    anderson_m: int = 5):
+                    anderson_m: int = 5, linear_solver=None,
+                    jac_pattern=None, assemble_jacobian=None,
+                    symmetric: Optional[bool] = None):
     """Solve F(u, θ) = 0 for u with O(1)-graph adjoint gradients w.r.t. θ.
 
     ``residual(u, *theta)`` is any JAX-traceable function.  The forward may
     take many Newton/Picard/Anderson iterations (each with inner linear
-    solves); the backward is ONE adjoint solve Jᵀλ = g (matrix-free BiCGStab
-    on ``jax.vjp`` of the residual) plus one VJP into θ.
+    solves); the backward is ONE adjoint solve Jᵀλ = g plus one VJP into θ.
+
+    Default (matrix-free) path: Newton inner solves and the adjoint run
+    BiCGStab on ``jax.jvp``/``jax.vjp`` of the residual — no pattern needed.
+
+    SparseNewton path (paper §3.2.2): pass ``jac_pattern=`` — the mesh-fixed
+    Jacobian sparsity as a :class:`~repro.core.sparse.SparseTensor` or
+    ``(row, col[, n])`` index arrays — and optionally ``linear_solver=``, a
+    :class:`~repro.core.dispatch.SolverConfig` steering the inner solves
+    through the plan engine (``backend="direct"``, ``precond="amg"``, any
+    registered backend).  The pattern is colored once, ONE analyzed plan
+    serves every Newton step, and the IFT backward solves Jᵀλ = g through
+    ``plan.transpose()`` on the converged step's factors/hierarchy — zero
+    extra factorizations (see :class:`repro.core.nonlinear.SparseNewton`).
+    ``assemble_jacobian(u, *theta) -> values`` overrides the coloring-based
+    assembly; ``symmetric=`` overrides the pattern's symmetry detection.
+    For ``method="picard"``/``"anderson"`` the forward stays fixed-point
+    iteration but the IFT backward still runs through the plan (one
+    assembly + setup at the converged point).
     """
     theta = tuple(theta)
+    sn = None
+    if jac_pattern is not None:
+        from .nonlinear import SparseNewton
+        cfg = linear_solver if linear_solver is not None else \
+            SolverConfig(tol=inner_tol, maxiter=inner_maxiter)
+        sn = SparseNewton(residual, jac_pattern, linear_solver=cfg,
+                          assemble_jacobian=assemble_jacobian,
+                          symmetric=symmetric)
+    elif linear_solver is not None:
+        raise ValueError("linear_solver= requires jac_pattern= declaring "
+                         "the Jacobian sparsity")
 
     @jax.custom_vjp
     def nl(theta):
-        return _forward(theta)
+        u, _ = _forward(theta)
+        return u
 
     def _forward(theta):
         F = lambda u: residual(u, *theta)
         if method == "newton":
+            if sn is not None:
+                u, _, vals = sn._solve_full(x0, *theta, tol=tol,
+                                            maxiter=maxiter, damping=damping)
+                return u, vals
             u, _ = _solvers.newton_solve(F, x0, tol=tol, maxiter=maxiter,
                                          damping=damping,
                                          inner_tol=inner_tol,
@@ -180,19 +215,32 @@ def nonlinear_solve(residual: Callable, x0: jax.Array, *theta,
                                            maxiter=maxiter, m=anderson_m)
         else:
             raise ValueError(f"unknown nonlinear method {method!r}")
-        return u
+        if sn is not None:
+            # fixed-point forward, plan-engine backward: one assembly at u*
+            # (its setup is memoized, so the bwd transpose solve reuses it)
+            return u, sn.assemble(u, *theta)
+        return u, None
 
     def fwd(theta):
-        u = jax.lax.stop_gradient(_forward(theta))
-        return u, (theta, u)
+        u, vals = _forward(theta)
+        # NOTE: ``vals`` is stashed as the identical array object the plan's
+        # setup memo keyed on — do not stop_gradient it (fresh array object,
+        # memo miss → a spurious refactorization in the backward)
+        return jax.lax.stop_gradient(u), (theta, u, vals)
 
     def bwd(res, g):
-        theta, u = res
-        # Jᵀ λ = g at the converged u* — matrix-free via vjp (paper: exact
-        # only once F(u*,θ) ≈ 0; early termination biases the gradient).
-        _, vjp_u = jax.vjp(lambda uu: residual(uu, *theta), u)
-        JT = lambda v: vjp_u(v)[0]
-        lam, _ = _solvers.bicgstab(JT, g, tol=inner_tol, maxiter=inner_maxiter)
+        theta, u, vals = res
+        if vals is not None:
+            # Jᵀ λ = g on the transpose view of the step plan — converged
+            # factors/hierarchy reused, zero refactorization (Eq. 2)
+            lam, _ = sn.solve_adjoint(vals, g)
+        else:
+            # matrix-free via vjp (paper: exact only once F(u*,θ) ≈ 0;
+            # early termination biases the gradient)
+            _, vjp_u = jax.vjp(lambda uu: residual(uu, *theta), u)
+            JT = lambda v: vjp_u(v)[0]
+            lam, _ = _solvers.bicgstab(JT, g, tol=inner_tol,
+                                       maxiter=inner_maxiter)
         # ∂L/∂θ = −λᵀ ∂F/∂θ
         _, vjp_th = jax.vjp(lambda *th: residual(u, *th), *theta)
         gtheta = jax.tree.map(lambda t: -t, vjp_th(lam))
@@ -209,20 +257,45 @@ def nonlinear_solve(residual: Callable, x0: jax.Array, *theta,
 def sparse_eigsh(A: SparseTensor, k: int = 6, *, method: str = "lobpcg",
                  tol: float = 1e-6, maxiter: int = 200,
                  compute_vector_grads: bool = True, largest: bool = False,
-                 seed: int = 0):
+                 precond: Optional[str] = None, seed: int = 0):
     """k extremal eigenpairs of symmetric A with Hellmann–Feynman adjoint.
 
     Returns ``(w (…,k), V (…,k,n))``.  Eigenvalue cotangents cost one O(nnz)
     outer product; eigenvector cotangents one deflated CG solve per pair.
     Simple (non-degenerate) eigenvalues assumed — paper §5.
+
+    ``precond`` (``"amg"``, ``"jacobi"``, ``"block_jacobi"``, ``"ilu"``, ...;
+    LOBPCG only) routes the residual preconditioner through the plan engine:
+    the pattern's cached plan builds the hierarchy/factors ONCE at analyze
+    time, the per-values refresh goes through the plan's setup memo —
+    shared with any linear solves on the same tensor — and the backward's
+    deflated CG reuses the same apply (for ``largest=False``, where the
+    deflated operator A − λ_k I is positive on the complement; the
+    ``largest=True`` backward stays unpreconditioned).
     """
     row, col, n = A.row, A.col, A.shape[0]
+
+    pplan = None
+    if precond is not None:
+        if method != "lobpcg":
+            raise ValueError(f"precond= requires method='lobpcg', "
+                             f"got method={method!r}")
+        pcfg = SolverConfig(backend="jnp", method="cg", tol=tol,
+                            maxiter=maxiter, precond=precond)
+        pplan = _dispatch.get_plan(A, pcfg)
+
+    def _make_M(val, mv):
+        """Single-vector preconditioner apply from the plan's memoized
+        values-setup — LOBPCG vmaps it over the residual block."""
+        _, pstate, _ = pplan.setup(pplan.matrix(val))
+        return pplan.artifacts["precond"].make_apply(pstate, mv)
 
     def _impl(val):
         mv = _dispatch.make_matvec(A.with_values(val))
         if method == "lobpcg":
             X0 = jax.random.normal(jax.random.PRNGKey(seed), (k, n), val.dtype)
-            w, V, _ = _solvers.lobpcg(mv, X0, tol=tol, maxiter=maxiter,
+            M = _make_M(val, mv) if pplan is not None else _solvers._identity
+            w, V, _ = _solvers.lobpcg(mv, X0, M=M, tol=tol, maxiter=maxiter,
                                       largest=largest)
             return w, V
         if method == "lanczos":
@@ -252,6 +325,13 @@ def sparse_eigsh(A: SparseTensor, k: int = 6, *, method: str = "lobpcg",
             # (gᵀv_j/(λ_k−λ_j)); the uncomputed complement — where A − λ_k I
             # is definite for extremal pairs — takes one deflated CG solve.
             mv = _dispatch.make_matvec(A.with_values(val))
+            # plan-engine preconditioner for the deflated solves: ``val`` is
+            # the identical array the forward set up → setup-memo hit, the
+            # SAME hierarchy/factors serve forward and backward.  Skipped for
+            # largest=True (the deflated operator is negative there, an SPD
+            # M ≈ A⁻¹ would break CG).
+            Mp = _make_M(val, mv) if (pplan is not None and not largest) \
+                else None
 
             def pair_grad(i, acc):
                 lam_i = w[i]
@@ -268,7 +348,10 @@ def sparse_eigsh(A: SparseTensor, k: int = 6, *, method: str = "lobpcg",
                 proj = lambda z: z - V.T @ (V @ z)
                 op = lambda z: proj(mv(proj(z)) - lam_i * proj(z))
                 rhs = -proj(gv)
-                y_rest, _ = _solvers.cg(op, rhs, tol=tol, maxiter=maxiter * 4)
+                Mdef = _solvers._identity if Mp is None else \
+                    (lambda z: proj(Mp(proj(z))))
+                y_rest, _ = _solvers.cg(op, rhs, M=Mdef, tol=tol,
+                                        maxiter=maxiter * 4)
                 y = y_comp + proj(y_rest)
                 # the solver sees sym(A): differentiate the symmetrized map
                 return acc + 0.5 * (y[row] * v_i[col] + v_i[row] * y[col])

@@ -98,6 +98,8 @@ PLAN_STATS: Dict[str, int] = {
     "galerkin": 0,         # AMG numeric Galerkin products (once/values array)
     "kernel_plan": 0,      # BELL conversions run by the analyze-time kernel plan
     "evictions": 0,        # plans dropped by the bounded LRU plan cache
+    "jac_color": 0,        # Jacobian pattern colorings (once per SparseNewton)
+    "jac_assemble": 0,     # numeric Jacobian assemblies (jvp probe sweeps)
 }
 
 

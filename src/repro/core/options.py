@@ -68,6 +68,14 @@ class Options:
         Optional byte budget for the same cache, sized from each plan's
         artifact arrays (BELL slot tables, direct/ILU/AMG factor programs);
         ``None`` means entry-count-only bounding.
+    jac_coloring_budget
+        Cap on the number of Jacobian colors (jvp probe vectors) a
+        :class:`repro.core.nonlinear.SparseNewton` pattern may need before
+        the coloring-based assembly refuses — a nearly-dense column of the
+        declared pattern would otherwise silently turn each Newton step into
+        O(n) residual sweeps.  Past the cap, pass an explicit
+        ``assemble_jacobian`` callback (or raise the budget).  Read at
+        coloring time by :func:`repro.core.nonlinear.SparseNewton`.
     """
     fused_step: str = "auto"
     supernodal: str = "auto"
@@ -76,6 +84,7 @@ class Options:
     bell_min_fill: float = 1.0 / 64.0
     plan_cache_cap: int = 32
     plan_cache_bytes: Optional[int] = None
+    jac_coloring_budget: int = 256
 
     def _validate(self) -> "Options":
         if self.fused_step not in ("auto", "on", "off"):
@@ -84,7 +93,7 @@ class Options:
         if self.supernodal not in ("auto", "on", "off"):
             raise ValueError(
                 f"supernodal must be 'auto'|'on'|'off', got {self.supernodal!r}")
-        for name in ("dense_budget", "direct_budget"):
+        for name in ("dense_budget", "direct_budget", "jac_coloring_budget"):
             v = getattr(self, name)
             if not isinstance(v, int) or v < 0:
                 raise ValueError(f"{name} must be a non-negative int, got {v!r}")

@@ -21,7 +21,7 @@ from jax import lax
 
 __all__ = [
     "SolveInfo", "SolveResult", "cg", "cg_fused", "bicgstab",
-    "bicgstab_fused", "block_cg", "gmres", "cg_scan",
+    "bicgstab_fused", "block_cg", "gmres", "cg_scan", "eigh_pinv_solve",
     "dense_solve", "newton_solve", "picard_solve", "anderson_solve",
     "lobpcg", "lanczos",
 ]
@@ -66,6 +66,31 @@ def as_solve_result(x, info: SolveInfo,
 
 def _identity(x):
     return x
+
+
+def eigh_pinv_solve(G, rhs, *, ridge: float = 1e-12):
+    """Solve the (near-)singular symmetric system ``G x = rhs`` by a
+    symmetric-eigendecomposition pseudo-inverse with a RELATIVE cutoff.
+
+    ``G`` is symmetrized, eigenvalues below ``max(ridge, m·10·eps) ·
+    max|w|`` are zeroed instead of inverted, so rank-deficient directions
+    (converged/duplicate columns in :func:`block_cg`'s Gram systems, stale
+    difference columns in :func:`anderson_solve`'s window) become inert
+    no-ops rather than amplified roundoff.  Unlike a FIXED ridge, the cutoff
+    scales with the dtype: in f32 roundoff noise sits at ~1e-7·‖G‖, far
+    above a 1e-12 ridge — the fixed-ridge normal-equations solve there
+    returns garbage coefficients and stagnates (the PR-7 f32 Anderson bug).
+    ``rhs`` may be a vector ``(m,)`` or a matrix ``(m, k)``.
+    """
+    m = G.shape[0]
+    cutoff = jnp.maximum(jnp.asarray(ridge, G.dtype),
+                         m * 10 * jnp.finfo(G.dtype).eps)
+    w, V = jnp.linalg.eigh(0.5 * (G + G.T))
+    cut = jnp.max(jnp.abs(w)) * cutoff
+    winv = jnp.where(jnp.abs(w) > cut, 1.0 / w, 0.0)
+    if rhs.ndim == 1:
+        return V @ (winv * (V.T @ rhs))
+    return V @ (winv[:, None] * (V.T @ rhs))
 
 
 # ---------------------------------------------------------------------------
@@ -342,16 +367,11 @@ def block_cg(matvec: Callable, B: jax.Array,
     mv = jax.vmap(matvec)
     Mv = jax.vmap(M)
     target = jnp.maximum(tol * jnp.linalg.norm(B, axis=1), atol)
-    # both Gram matrices (PᵀAP and ZᵀR) are symmetric for SPD A and
-    # symmetric M, up to roundoff — symmetrize and pseudo-invert
-    cutoff = jnp.maximum(jnp.asarray(ridge, B.dtype),
-                         k * 10 * jnp.finfo(B.dtype).eps)
 
     def gram_solve(G, rhs):
-        w, V = jnp.linalg.eigh(0.5 * (G + G.T))
-        cut = jnp.max(jnp.abs(w)) * cutoff
-        winv = jnp.where(jnp.abs(w) > cut, 1.0 / w, 0.0)
-        return V @ (winv[:, None] * (V.T @ rhs))
+        # both Gram matrices (PᵀAP and ZᵀR) are symmetric for SPD A and
+        # symmetric M, up to roundoff — symmetrize and pseudo-invert
+        return eigh_pinv_solve(G, rhs, ridge=ridge)
 
     R0 = B - mv(X0)
     Z0 = Mv(R0)
@@ -502,9 +522,31 @@ def dense_solve(A_dense: jax.Array, b: jax.Array, method: str = "lu"):
 def newton_solve(residual: Callable, x0: jax.Array, *, tol: float = 1e-8,
                  maxiter: int = 50, dense_jacobian_budget: int = 2048,
                  inner_tol: float = 1e-8, inner_maxiter: int = 500,
-                 damping: float = 1.0):
+                 damping: float = 1.0, linear_solver=None, jac_pattern=None,
+                 assemble_jacobian: Optional[Callable] = None):
     """Newton's method.  Small systems use a dense Jacobian (MXU solve);
-    large systems use matrix-free JVP-Krylov (BiCGStab) inner solves."""
+    large systems use matrix-free JVP-Krylov (BiCGStab) inner solves.
+
+    Declaring the Jacobian sparsity (``jac_pattern`` — a
+    :class:`~repro.core.sparse.SparseTensor` or ``(row, col, n)`` triple)
+    routes every inner solve through the plan engine instead: one symbolic
+    analysis serves the whole sweep, values refreshed per step
+    (:class:`repro.core.nonlinear.SparseNewton`).  ``linear_solver`` is the
+    inner :class:`~repro.core.dispatch.SolverConfig` (``backend="direct"``,
+    ``precond="amg"``, ...); ``assemble_jacobian(u) -> values`` overrides
+    the coloring-based jvp assembly.
+    """
+    if linear_solver is not None or jac_pattern is not None:
+        if jac_pattern is None:
+            raise ValueError("linear_solver= needs jac_pattern= declaring "
+                             "the Jacobian sparsity")
+        from .nonlinear import SparseNewton   # lazy: avoids a module cycle
+        sn = SparseNewton(lambda u: residual(u), jac_pattern,
+                          linear_solver=linear_solver,
+                          assemble_jacobian=(
+                              None if assemble_jacobian is None
+                              else lambda u: assemble_jacobian(u)))
+        return sn.solve(x0, tol=tol, maxiter=maxiter, damping=damping)
     n = x0.shape[-1]
     use_dense = n <= dense_jacobian_budget
 
@@ -549,14 +591,27 @@ def picard_solve(fixed_point: Callable, x0: jax.Array, *, tol: float = 1e-8,
 
 def anderson_solve(fixed_point: Callable, x0: jax.Array, *, m: int = 5,
                    tol: float = 1e-8, maxiter: int = 200, beta: float = 1.0,
-                   ridge: float = 1e-12):
+                   ridge: float = 1e-12, gram_solver: str = "pinv"):
     """Anderson acceleration, type-II difference form (Walker & Ni 2011):
 
         f_k = G(x_k) − x_k
-        γ   = argmin ‖f_k − ΔF γ‖²  (ridge-regularized, window m)
+        γ   = argmin ‖f_k − ΔF γ‖²  (windowed least squares, window m)
         x⁺  = x_k + β f_k − (ΔX + β ΔF) γ
 
-    Convergence is checked on ‖f_k‖ (the true fixed-point residual)."""
+    Convergence is checked on ‖f_k‖ (the true fixed-point residual).
+
+    The normal-equations Gram matrix ΔF ΔFᵀ is structurally rank-deficient
+    whenever the window is degenerate — fewer iterations than ``m``
+    (zero-padded rows), duplicate residual columns, or a residual space of
+    dimension < m (any affine map).  ``gram_solver="pinv"`` (default) solves
+    it through :func:`eigh_pinv_solve`, the relative-cutoff pseudo-inverse
+    :func:`block_cg` uses for exactly the same breakdown; ``"ridge"`` keeps
+    the legacy fixed-ridge ``solve(G + ridge·I)`` path, which stagnates in
+    f32 (roundoff ~1e-7·‖G‖ swamps the 1e-12 ridge) — retained only as the
+    A/B baseline for the regression test."""
+    if gram_solver not in ("pinv", "ridge"):
+        raise ValueError(f"gram_solver must be 'pinv'|'ridge', "
+                         f"got {gram_solver!r}")
     n = x0.shape[-1]
     dtype = x0.dtype
     Xh = jnp.zeros((m + 1, n), dtype)   # iterate history (last row = newest)
@@ -578,8 +633,11 @@ def anderson_solve(fixed_point: Callable, x0: jax.Array, *, m: int = 5,
         valid = (jnp.arange(m) >= (m - mk))[:, None]
         dXv = jnp.where(valid, dX, 0.0)
         dFv = jnp.where(valid, dF, 0.0)
-        gram = dFv @ dFv.T + ridge * jnp.eye(m, dtype=dtype)
-        gamma = jnp.linalg.solve(gram, dFv @ f)
+        if gram_solver == "pinv":
+            gamma = eigh_pinv_solve(dFv @ dFv.T, dFv @ f, ridge=ridge)
+        else:
+            gram = dFv @ dFv.T + ridge * jnp.eye(m, dtype=dtype)
+            gamma = jnp.linalg.solve(gram, dFv @ f)
         x_new = x + beta * f - gamma @ (dXv + beta * dFv)
         return (x_new, Xh, Fh, k + 1, rn)
 

@@ -33,6 +33,7 @@ __all__ = [
     "aggregate_pattern",
     "spgemm_program",
     "tentative_coarse_pattern",
+    "color_pattern",
 ]
 
 
@@ -200,6 +201,51 @@ def tentative_coarse_pattern(row, col, n: int, *, coarsest: int = 48,
     crow = (ukeys // n_c).astype(np.int64)
     ccol = (ukeys % n_c).astype(np.int64)
     return agg, int(n_c), e2c.astype(np.int64), crow, ccol
+
+
+def color_pattern(row, col, n_cols: int):
+    """Greedy column coloring of a Jacobian pattern (Curtis–Powell–Reid).
+
+    Two columns get different colors whenever they share a structurally
+    nonzero row — a distance-1 coloring of the column-intersection graph —
+    so ONE ``jax.jvp`` probe per color recovers every pattern entry exactly:
+    ``J[r, c] == (J @ p_{color[c]})[r]`` because no other column of c's
+    color touches row r.  Eager numpy, run once per pattern by
+    :class:`repro.core.nonlinear.SparseNewton` — the symbolic half of sparse
+    Jacobian assembly, the same analyze-once discipline as the direct
+    backend's AMD/etree pass.  Columns are visited largest-degree first
+    (the classic LF ordering keeps the color count near the max row count).
+    Returns ``(color, n_colors)`` with ``color[j] in [0, n_colors)``.
+    """
+    r = np.asarray(row, np.int64)
+    c = np.asarray(col, np.int64)
+    if r.size == 0:
+        return np.zeros(n_cols, np.int64), 1 if n_cols else 0
+    n_rows = int(r.max()) + 1
+    orow = np.argsort(r, kind="stable")
+    cols_sorted = c[orow]
+    rptr = np.searchsorted(r[orow], np.arange(n_rows + 1))
+    row_cols = np.split(cols_sorted, rptr[1:-1])
+    ocol = np.argsort(c, kind="stable")
+    rows_sorted = r[ocol]
+    cptr = np.searchsorted(c[ocol], np.arange(n_cols + 1))
+
+    color = np.full(n_cols, -1, np.int64)
+    n_colors = 1
+    deg = cptr[1:] - cptr[:-1]
+    for j in np.argsort(-deg, kind="stable"):
+        rows_j = rows_sorted[cptr[j]:cptr[j + 1]]
+        if rows_j.size == 0:
+            color[j] = 0          # structurally empty column: any color
+            continue
+        nb = np.concatenate([row_cols[i] for i in rows_j])
+        used = np.zeros(n_colors + 1, bool)
+        seen = color[nb]
+        used[seen[seen >= 0]] = True
+        free = int(np.flatnonzero(~used)[0])
+        color[j] = free
+        n_colors = max(n_colors, free + 1)
+    return color, int(n_colors)
 
 
 # ---------------------------------------------------------------------------
@@ -466,11 +512,15 @@ class SparseTensor:
         return adjoint.sparse_solve(cfg, self, b, x0)
 
     def eigsh(self, k: int = 6, *, method: str = "lobpcg", tol: float = 1e-6,
-              maxiter: int = 200, compute_vector_grads: bool = True):
+              maxiter: int = 200, compute_vector_grads: bool = True,
+              largest: bool = False, precond: Optional[str] = None,
+              seed: int = 0):
         from . import adjoint
         return adjoint.sparse_eigsh(self, k, method=method, tol=tol,
                                     maxiter=maxiter,
-                                    compute_vector_grads=compute_vector_grads)
+                                    compute_vector_grads=compute_vector_grads,
+                                    largest=largest, precond=precond,
+                                    seed=seed)
 
     def slogdet(self):
         """(sign, log|det|): sparse via the plan engine's cached LDLᵀ/LU

@@ -51,6 +51,9 @@ from .core.sparse import SparseTensor
 __all__ = [
     "SparseTensor",
     "DSparseTensor",
+    "SparseNewton",
+    "nonlinear_solve",
+    "eigsh",
     "SolverConfig",
     "SolverPlan",
     "SolveResult",
@@ -75,6 +78,10 @@ _LAZY = {
     "DSparseTensor": ("repro.core.distributed", "DSparseTensor"),
     "serve": ("repro.launch.solve_serve", "serve"),
     "SolveServer": ("repro.launch.solve_serve", "SolveServer"),
+    # nonlinear/eigen layer: pulls in the adjoint + coloring machinery
+    "SparseNewton": ("repro.core.nonlinear", "SparseNewton"),
+    "nonlinear_solve": ("repro.core.adjoint", "nonlinear_solve"),
+    "eigsh": ("repro.core.adjoint", "sparse_eigsh"),
 }
 
 

@@ -26,8 +26,11 @@ EXPECTED_SURFACE = sorted([
     "SolveServer",
     "SolverConfig",
     "SolverPlan",
+    "SparseNewton",
     "SparseTensor",
+    "eigsh",
     "get_options",
+    "nonlinear_solve",
     "get_plan",
     "options",
     "register_backend",

@@ -179,3 +179,122 @@ def test_solve_info_reports_convergence():
     assert bool(info.converged)
     assert int(info.iters) > 0
     assert float(info.resnorm) < 1e-7 * np.linalg.norm(np.ones(A.shape[0])) * 10
+
+
+# ---------------------------------------------------------------------------
+# nonlinear fixed-point solvers: property-based coverage + the PR-10
+# Anderson least-squares regression
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_compat import given, settings, st
+
+
+def _contraction(seed, n, L):
+    """Random affine map G(x) = c + M x with ‖M‖₂ = L < 1 — the Banach
+    fixed point x* = (I − M)⁻¹ c is unique and known."""
+    rng = np.random.default_rng(seed)
+    M = rng.normal(size=(n, n))
+    M *= L / np.linalg.norm(M, 2)
+    c = rng.normal(size=n)
+    x_star = np.linalg.solve(np.eye(n) - M, c)
+    Mj, cj = jnp.asarray(M), jnp.asarray(c)
+    return (lambda x: cj + Mj @ x), x_star
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(2, 24),
+       L=st.floats(0.05, 0.9))
+def test_picard_converges_on_random_contractions(seed, n, L):
+    G, x_star = _contraction(seed, n, L)
+    tol = 1e-10
+    x, info = solvers.picard_solve(G, jnp.zeros(n), tol=tol, maxiter=5000)
+    assert bool(info.converged) == bool(float(info.resnorm) <= tol)
+    assert bool(info.converged)
+    np.testing.assert_allclose(np.asarray(x), x_star, atol=1e-8)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(2, 24),
+       L=st.floats(0.05, 0.9), m=st.integers(1, 12))
+def test_anderson_converges_on_random_contractions(seed, n, L, m):
+    G, x_star = _contraction(seed, n, L)
+    tol = 1e-10
+    x, info = solvers.anderson_solve(G, jnp.zeros(n), m=m, tol=tol,
+                                     maxiter=2000)
+    assert bool(info.converged) == bool(float(info.resnorm) <= tol)
+    assert bool(info.converged), (seed, n, L, m)
+    np.testing.assert_allclose(np.asarray(x), x_star, atol=1e-7)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(2, 12))
+def test_anderson_degenerate_windows_no_nan(seed, n):
+    """m > iteration count AND duplicate residual columns (an affine map on
+    a rank-1 M makes successive differences collinear): the window's Gram
+    matrix is singular from step one — the pinv path must stay finite."""
+    rng = np.random.default_rng(seed)
+    u = rng.normal(size=n)
+    v = rng.normal(size=n)
+    M = 0.5 * np.outer(u, v) / (np.linalg.norm(u) * np.linalg.norm(v))
+    c = rng.normal(size=n)
+    x_star = np.linalg.solve(np.eye(n) - M, c)
+    Mj, cj = jnp.asarray(M), jnp.asarray(c)
+    G = lambda x: cj + Mj @ x
+    # window far larger than the iterations the solve will ever take
+    x, info = solvers.anderson_solve(G, jnp.zeros(n), m=4 * n, tol=1e-11,
+                                     maxiter=500)
+    assert bool(jnp.all(jnp.isfinite(x)))
+    assert bool(info.converged) == bool(float(info.resnorm) <= 1e-11)
+    np.testing.assert_allclose(np.asarray(x), x_star, atol=1e-8)
+
+
+def test_anderson_f32_pinv_regression():
+    """PR-10 bugfix: the fixed-ridge (1e-12) Gram solve underflows f32
+    roundoff (~1e-7·‖G‖ ≫ ridge), producing NaN iterates on large-scale
+    rank-deficient windows; the relative-cutoff eigh pseudo-inverse (the
+    same ``eigh_pinv_solve`` block_cg uses) stays finite and converges.
+    ``gram_solver="ridge"`` is kept only as the A/B baseline."""
+    rng = np.random.default_rng(0)
+    n, m = 6, 8
+    M = rng.normal(size=(n, n)).astype(np.float32)
+    M = 0.5 * M / np.linalg.norm(M, 2)
+    U, S, Vt = np.linalg.svd(M)
+    S[2:] = 0.0                      # rank-2: degenerate difference window
+    M = (U * S) @ Vt
+    c = (rng.normal(size=n) * 1e3).astype(np.float32)   # amplify roundoff
+    x_star = np.linalg.solve(np.eye(n) - M, c)
+    Mj, cj = jnp.asarray(M, jnp.float32), jnp.asarray(c, jnp.float32)
+    G = lambda x: cj + Mj @ x
+    x0 = jnp.zeros(n, jnp.float32)
+
+    x_old, _ = solvers.anderson_solve(G, x0, m=m, tol=1e-3, maxiter=100,
+                                      gram_solver="ridge")
+    assert not bool(jnp.all(jnp.isfinite(x_old)))       # the old path fails
+
+    x_new, info = solvers.anderson_solve(G, x0, m=m, tol=1e-3, maxiter=100)
+    assert bool(jnp.all(jnp.isfinite(x_new)))
+    assert bool(info.converged)
+    np.testing.assert_allclose(np.asarray(x_new), x_star, atol=1e-2)
+
+    with pytest.raises(ValueError, match="gram_solver"):
+        solvers.anderson_solve(G, x0, gram_solver="qr")
+
+
+def test_eigh_pinv_solve_relative_cutoff():
+    rng = np.random.default_rng(5)
+    Q, _ = np.linalg.qr(rng.normal(size=(6, 6)))
+    w = np.array([1e4, 2e3, 50.0, 1.0, 1e-12, 0.0])    # hard rank-4 @ f64
+    G = jnp.asarray((Q * w) @ Q.T)
+    y = jnp.asarray(rng.normal(size=6))
+    rhs = G @ y
+    x = solvers.eigh_pinv_solve(G, rhs)
+    # exact on range(G), zero on the null space
+    np.testing.assert_allclose(np.asarray(G @ x), np.asarray(rhs), atol=1e-6)
+    null = jnp.asarray(Q[:, 4:])
+    assert float(jnp.linalg.norm(null.T @ x)) < 1e-8
+    # multi-rhs shape
+    X = solvers.eigh_pinv_solve(G, jnp.stack([rhs, rhs], 1))
+    assert X.shape == (6, 2)

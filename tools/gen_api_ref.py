@@ -76,6 +76,8 @@ def render() -> str:
         ("Solving",
          ["solve", "solve_with_info", "SolveResult", "SolverConfig",
           "register_backend"]),
+        ("Nonlinear and eigen",
+         ["nonlinear_solve", "SparseNewton", "eigsh"]),
         ("Options",
          ["Options", "set_options", "options", "get_options"]),
         ("Serving",
